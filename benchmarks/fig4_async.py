@@ -1,0 +1,34 @@
+"""Paper Fig. 4 — asynchronous (two-stream) pipeline vs synchronous.
+
+The paper overlaps H2D of block k+1 with compute of block k and converges
+to ≈10 % end-to-end gain at large resolutions. We run the streamed GLCM
+pipeline (core.pipeline, depth 1 = sync vs depth 2 = the paper's double
+buffer) over an image stream and report the overlap gain.
+"""
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.pipeline import glcm_feature_stream
+from repro.data.images import image_stream
+
+
+def _run(prefetch: int, images) -> float:
+    t0 = time.perf_counter()
+    out = list(glcm_feature_stream(images, levels=32, prefetch=prefetch))
+    assert len(out) == len(images)
+    return time.perf_counter() - t0
+
+
+def run() -> None:
+    for size, n in ((512, 12), (1024, 8)):
+        images = list(image_stream("smooth", size, n))
+        _ = _run(1, images[:2])  # warm the jit cache
+        t_sync = _run(1, images)
+        t_async = _run(2, images)
+        gain = (t_sync - t_async) / max(t_sync, 1e-9)
+        emit(f"fig4/{size}x{size}/sync", t_sync * 1e6 / n, "")
+        emit(f"fig4/{size}x{size}/double_buffer", t_async * 1e6 / n,
+             f"overlap_gain={100*gain:.1f}%_paper≈10%")

@@ -1,0 +1,43 @@
+"""Beyond-paper: the GLCM voting primitive inside the MoE router.
+
+Times the two dispatch strategies (paper-faithful one-hot einsum vs indexed
+gather) and the router's conflict-free load counting, and reports the
+dispatch-tensor bytes — the quantity that made einsum dispatch infeasible at
+arctic's 128 experts (dry-run §Perf).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs import get_config
+from repro.kernels.ops import onehot_count
+from repro.models.moe import apply_moe, init_moe
+
+
+def run() -> None:
+    base = get_config("mixtral-8x7b").reduced(
+        d_model=128, d_ff=256, num_experts=8)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 512, base.d_model)), jnp.float32)
+
+    for strategy in ("einsum", "gather"):
+        cfg = dataclasses.replace(base, moe_dispatch=strategy)
+        p = init_moe(cfg, jax.random.key(0))
+        f = jax.jit(lambda px, xx, _c=cfg: apply_moe(_c, px, xx)[0])
+        us = time_fn(f, p, x)
+        t = x.shape[1]
+        cap = int(t * cfg.num_experts_per_tok * cfg.capacity_factor
+                  / cfg.num_experts)
+        disp_bytes = (t * cfg.num_experts_per_tok * cfg.num_experts * cap * 4
+                      if strategy == "einsum" else 0)
+        emit(f"moe_dispatch/{strategy}", us,
+             f"dispatch_tensor_bytes_per_row={disp_bytes}")
+
+    ids = jnp.asarray(rng.integers(0, 8, (1, 4096)), jnp.int32)
+    f = jax.jit(lambda i: onehot_count(i, 8))
+    emit("moe_dispatch/onehot_count_4096", time_fn(f, ids),
+         "paper_scheme2_counting")

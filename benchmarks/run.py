@@ -1,0 +1,33 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2]
+
+Output format: ``name,us_per_call,derived`` CSV lines.
+"""
+
+import argparse
+import sys
+import time
+
+MODULES = ("table2_scheme1", "table3_scheme2", "table4_transfer",
+           "fig4_async", "fig5_speedup", "moe_dispatch")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module names")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        t0 = time.time()
+        mod.run()
+        print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

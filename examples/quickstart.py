@@ -1,0 +1,56 @@
+"""Quickstart: the paper's pipeline end to end on one image.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Quantize → GLCM (all three schemes + the Pallas kernel) → Haralick-14,
+reproducing the paper's parameter grid (L ∈ {8, 32}; d ∈ {1, 4};
+θ ∈ {0°, 45°}) on synthetic Fig-1(a)/(b)-style textures.
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import glcm as glcm_fn, glcm_features
+from repro.core.haralick import FEATURE_NAMES
+from repro.data.images import random_texture, smooth_texture
+
+
+def main() -> None:
+    size = 256
+    images = {"fig1a-smooth": smooth_texture(size), "fig1b-random": random_texture(size)}
+
+    for name, img in images.items():
+        print(f"\n=== {name} ({size}×{size}) ===")
+        for levels in (8, 32):
+            for d, theta in ((1, 0), (1, 45), (4, 0), (4, 45)):
+                mats = {}
+                for scheme in ("scatter", "onehot", "blocked", "pallas"):
+                    t0 = time.perf_counter()
+                    P = glcm_fn(jnp.asarray(img, jnp.int32) // (256 // levels),
+                               levels, d, theta, scheme=scheme)
+                    P.block_until_ready()
+                    dt = (time.perf_counter() - t0) * 1e3
+                    mats[scheme] = (np.asarray(P), dt)
+                ref = mats["scatter"][0]
+                for s, (m, dt) in mats.items():
+                    agree = np.array_equal(m, ref)
+                    assert agree, f"{s} disagrees with scatter!"
+                times = ", ".join(f"{s}:{dt:.1f}ms" for s, (_, dt) in mats.items())
+                print(f"  L={levels:<3} d={d} θ={theta:<3}° total pairs="
+                      f"{int(ref.sum()):>7}  [{times}] ✓ all schemes agree")
+
+        feats = glcm_features(jnp.asarray(img, jnp.float32), 32)
+        print(f"  Haralick-14 at (d,θ) grid → shape {feats.shape}")
+        for k in (0, 1, 2, 8):  # energy, contrast, correlation, entropy
+            vals = ", ".join(f"{float(v):.4f}" for v in feats[:, k])
+            print(f"    {FEATURE_NAMES[k]:<28} [{vals}]")
+
+    print("\nNote the paper's §II.A effect: the smooth image concentrates "
+          "votes on few GLCM bins (high energy), the random image scatters "
+          "them (high entropy) — the conflict regimes of Fig. 1.")
+
+
+if __name__ == "__main__":
+    main()

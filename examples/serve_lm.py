@@ -1,0 +1,46 @@
+"""Batched serving demo: prefill + decode with every cache kind.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Generates continuations for a batch of prompts on three architectures with
+structurally different decode state (full KV, SWA ring + SSM, pure SSM) and
+verifies greedy decode equals the full-forward oracle.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    for arch in ("smollm-135m", "hymba-1.5b", "mamba2-130m"):
+        cfg = get_config(arch).reduced()
+        if cfg.num_experts:
+            cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+        api = build_model(cfg)
+        params = api.init(jax.random.key(0))
+        eng = Engine(cfg, params, ServeConfig(max_new_tokens=8, s_cache=48))
+        prompts = rng.integers(0, cfg.vocab_size, (4, 8)).astype(np.int32)
+        out = eng.generate(prompts)
+
+        # Oracle: greedy by repeated full forwards.
+        toks = jnp.asarray(prompts)
+        for _ in range(8):
+            logits, _ = api.forward(params, {"tokens": toks})
+            nxt = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
+            toks = jnp.concatenate([toks, nxt], axis=1)
+        ok = np.array_equal(out, np.asarray(toks))
+        print(f"{arch:<14} batch=4 new=8 cache={'SSM' if cfg.family=='ssm' else ('ring+SSM' if cfg.family=='hybrid' else 'full KV')}"
+              f"  greedy==oracle: {ok}")
+        assert ok
+
+
+if __name__ == "__main__":
+    main()

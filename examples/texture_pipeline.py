@@ -1,0 +1,47 @@
+"""Streamed texture-feature extraction — the paper's Scheme 3 end to end.
+
+    PYTHONPATH=src python examples/texture_pipeline.py
+
+A stream of images is processed with depth-2 double buffering (the paper's
+two CUDA streams): host→device transfer of image k+1 overlaps compute of
+image k. Prints the overlap speed-up (the paper's Fig. 4 ≈ 10 % regime —
+here bounded by CPU copy costs, but the pipeline structure is identical).
+"""
+
+import time
+
+import numpy as np
+
+from repro.core.pipeline import glcm_feature_stream
+from repro.data.images import image_stream
+
+
+def run(prefetch: int, images) -> float:
+    t0 = time.perf_counter()
+    feats = list(glcm_feature_stream(images, levels=32, prefetch=prefetch))
+    dt = time.perf_counter() - t0
+    assert len(feats) == len(images)
+    assert all(np.isfinite(np.asarray(f)).all() for f in feats)
+    return dt
+
+
+def main() -> None:
+    n, size = 16, 512
+    images = list(image_stream("smooth", size, n)) + list(
+        image_stream("random", size, n))
+
+    # Warm the jit cache so timing reflects the pipeline, not compilation.
+    _ = run(1, images[:2])
+
+    t_sync = run(1, images)       # no overlap (paper's baseline)
+    t_async = run(2, images)      # double buffer (the paper's two streams)
+    t_deep = run(4, images)
+
+    print(f"{2*n} images @ {size}²: sync={t_sync:.2f}s  "
+          f"double-buffer={t_async:.2f}s  depth-4={t_deep:.2f}s")
+    print(f"overlap gain: {100*(t_sync-t_async)/t_sync:.1f}% "
+          f"(paper Fig. 4 converges to ≈10% on GPU)")
+
+
+if __name__ == "__main__":
+    main()

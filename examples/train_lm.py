@@ -1,0 +1,40 @@
+"""End-to-end LM training: a ~100M-class model for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Uses the real training substrate (AdamW + cosine schedule, grad clipping,
+remat, async checkpointing, straggler watchdog, deterministic resumable
+data). The config is a width/depth-reduced smollm-135m so a few hundred
+steps finish on CPU; the loss must drop visibly on the structured synthetic
+stream (planted n-grams).
+"""
+
+import argparse
+import tempfile
+
+from repro.configs import get_config
+from repro.train.loop import TrainLoopConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+
+    cfg = get_config("smollm-135m").reduced(
+        num_layers=4, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+        d_ff=512, vocab_size=4096)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        out = train(cfg, TrainLoopConfig(
+            total_steps=args.steps, log_every=25, ckpt_every=100,
+            ckpt_dir=ckpt_dir))
+    h = out["history"]
+    drop = h[0]["loss"] - h[-1]["loss"]
+    print(f"\nloss {h[0]['loss']:.3f} → {h[-1]['loss']:.3f} "
+          f"(Δ={drop:.3f} over {args.steps} steps)")
+    assert drop > 0.3, "model failed to learn the planted structure"
+    print("OK: the model learned the synthetic n-gram structure.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""repro.core — the paper's contribution (GLCM computation) as a library.
+
+Modules:
+  glcm        public API (scheme dispatch, quantize, features)
+  schemes     paper Schemes 1–3 in jnp (scatter / one-hot MXU / blocked+halo)
+  haralick    the 14 Haralick texture features
+  quantize    gray-level quantization (uniform / equalized)
+  distributed shard_map GLCM over a mesh (Scheme 3 at pod scale)
+  pipeline    host-side streamed, double-buffered processing (CUDA streams
+              analogue)
+"""
+
+from repro.core import distributed, haralick, pipeline, quantize, schemes
+from repro.core.glcm import PAPER_PAIRS, glcm, glcm_features
+
+__all__ = [
+    "glcm",
+    "glcm_features",
+    "PAPER_PAIRS",
+    "schemes",
+    "haralick",
+    "quantize",
+    "distributed",
+    "pipeline",
+]

@@ -1,0 +1,64 @@
+"""Vote-conflict analysis — the paper's §II.A, as a measurement tool.
+
+The paper explains Table II by the probability that concurrent threads vote
+the same GLCM bin. That probability is a pure property of the image's pair
+distribution; this module computes it so the Fig. 1(a)/(b) regimes become
+quantitative:
+
+  * ``conflict_profile``: per-bin vote shares p_i = P_i / Σ P.
+  * ``expected_collision_rate``: the probability two random concurrent
+    votes target the same bin (Simpson index Σ p_i² — the paper's
+    serialization driver; equals Haralick's *energy* of the GLCM, which is
+    the formal reason 'smooth image ⇒ slow atomics' and 'high L ⇒ fast').
+  * ``serialization_factor(n_threads)``: expected max queue length among
+    n concurrent voters under multinomial voting — the paper's 'threads
+    will be lining up' effect, E[max_i Binomial(n, p_i)] (upper-bounded).
+
+On TPU these quantities no longer affect runtime (DESIGN.md §2) — the tool
+exists to *demonstrate* that, and to predict GPU-side behavior.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schemes import glcm_onehot
+
+__all__ = ["conflict_profile", "expected_collision_rate",
+           "serialization_factor", "analyze_image"]
+
+
+def conflict_profile(img: jax.Array, levels: int, d: int = 1, theta: int = 0):
+    g = glcm_onehot(img, levels, d, theta)
+    total = jnp.maximum(g.sum(), 1.0)
+    return (g / total).reshape(-1)
+
+
+def expected_collision_rate(p: jax.Array) -> jax.Array:
+    """Simpson index Σ p_i² = P(two concurrent votes collide) = GLCM energy."""
+    return jnp.sum(p * p)
+
+
+def serialization_factor(p: jax.Array, n_threads: int) -> jax.Array:
+    """Upper bound on E[max_i Binomial(n, p_i)] (union bound + mean):
+    max_i (n·p_i) + sqrt(2·n·p_max·log K) — the expected depth of the
+    longest atomic queue among n concurrent voters."""
+    k = p.shape[0]
+    pmax = jnp.max(p)
+    mean_term = n_threads * pmax
+    dev_term = jnp.sqrt(2.0 * n_threads * pmax * jnp.log(jnp.asarray(float(k))))
+    return mean_term + dev_term
+
+
+def analyze_image(img: jax.Array, levels: int, d: int = 1, theta: int = 0,
+                  n_threads: int = 1024) -> dict:
+    p = conflict_profile(img, levels, d, theta)
+    rate = expected_collision_rate(p)
+    return {
+        "collision_rate": float(rate),
+        "energy": float(rate),  # identical — the paper's link to Haralick f1
+        "max_bin_share": float(jnp.max(p)),
+        "serialization_factor": float(serialization_factor(p, n_threads)),
+        "uniform_baseline": 1.0 / (levels * levels),
+    }

@@ -1,0 +1,98 @@
+"""Public GLCM API — one entry point over every scheme/backends.
+
+    from repro.core import glcm
+    P = glcm.glcm(img, levels=32, d=1, theta=45, scheme="pallas")
+    feats = glcm.glcm_features(img, levels=32)          # (4 offsets, 14)
+
+Schemes (see DESIGN.md §2 for the CUDA→TPU mapping):
+  "scatter"       paper Scheme 1 (contended scatter — conflict baseline)
+  "onehot"        paper Scheme 2 (conflict-free one-hot MXU voting), jnp
+  "blocked"       paper Scheme 3 single-device (halo'd row blocks, scanned)
+  "pallas"        pair-stream Pallas voting kernel (production path)
+  "pallas_fused"  fused tiled Pallas kernel (multi-offset, one image pass)
+  "auto"          "onehot" on CPU, "pallas" on TPU
+"""
+
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.haralick import haralick_features
+from repro.core.quantize import quantize_equalized, quantize_uniform
+from repro.core.schemes import PAPER_PAIRS, glcm_blocked, glcm_onehot, glcm_scatter
+from repro.kernels import ops as kops
+
+__all__ = ["glcm", "glcm_features", "Scheme", "PAPER_PAIRS"]
+
+Scheme = Literal["scatter", "onehot", "blocked", "pallas", "pallas_fused", "auto"]
+
+
+def _maybe_quantize(image: jax.Array, levels: int, quantize: str | None) -> jax.Array:
+    if quantize is None:
+        return image.astype(jnp.int32)
+    if quantize == "uniform":
+        return quantize_uniform(image, levels)
+    if quantize == "equalized":
+        return quantize_equalized(image, levels)
+    raise ValueError(f"unknown quantize mode {quantize!r}")
+
+
+def glcm(
+    image: jax.Array,
+    levels: int,
+    d: int = 1,
+    theta: int = 0,
+    *,
+    scheme: Scheme = "auto",
+    quantize: str | None = None,
+    symmetric: bool = False,
+    normalize: bool = False,
+    copies: int = 1,
+    num_blocks: int = 4,
+) -> jax.Array:
+    """Gray-level co-occurrence matrix of a 2-D image. Returns (L, L) f32."""
+    img = _maybe_quantize(image, levels, quantize)
+    if scheme == "auto":
+        scheme = "pallas" if jax.default_backend() == "tpu" else "onehot"
+    if scheme == "scatter":
+        out = glcm_scatter(img, levels, d, theta)
+    elif scheme == "onehot":
+        out = glcm_onehot(img, levels, d, theta, copies=max(copies, 1))
+    elif scheme == "blocked":
+        out = glcm_blocked(img, levels, d, theta, num_blocks=num_blocks)
+    elif scheme == "pallas":
+        out = kops.glcm_pallas(img, levels, d, theta).astype(jnp.float32)
+    elif scheme == "pallas_fused":
+        out = kops.glcm_pallas_multi(img, levels, ((d, theta),))[0].astype(jnp.float32)
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    out = out.astype(jnp.float32)
+    if symmetric:
+        out = out + out.T
+    if normalize:
+        out = out / jnp.maximum(out.sum(), 1.0)
+    return out
+
+
+def glcm_features(
+    image: jax.Array,
+    levels: int,
+    pairs: tuple[tuple[int, int], ...] = PAPER_PAIRS,
+    *,
+    scheme: Scheme = "auto",
+    quantize: str | None = "uniform",
+) -> jax.Array:
+    """Image → (len(pairs), 14) Haralick features (normalized GLCMs)."""
+    img = _maybe_quantize(image, levels, quantize)
+    if scheme == "auto":
+        scheme = "pallas_fused" if jax.default_backend() == "tpu" else "onehot"
+    if scheme == "pallas_fused":
+        mats = kops.glcm_pallas_multi(img, levels, pairs).astype(jnp.float32)
+    else:
+        mats = jnp.stack(
+            [glcm(img, levels, d, t, scheme=scheme, quantize=None) for d, t in pairs]
+        )
+    return haralick_features(mats)

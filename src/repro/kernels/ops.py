@@ -1,0 +1,137 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode for
+correctness validation; on TPU they compile to Mosaic. ``interpret`` is
+resolved once per call from the active backend unless forced.
+
+Also exports ``onehot_count`` — the conflict-free counting primitive distilled
+from the paper's Scheme 2, in the composable jnp form used inside model code
+(MoE router load statistics, token histograms). It is the same math as the
+kernel's voting matmul and is tested against ``ref.onehot_count_reference``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.glcm_kernel import (
+    DEFAULT_CHUNK,
+    DEFAULT_COPIES,
+    glcm_fused_pallas,
+    glcm_vote_pallas,
+)
+from repro.kernels.histogram_kernel import histogram_pallas
+
+__all__ = [
+    "glcm_pallas",
+    "glcm_pallas_multi",
+    "histogram",
+    "onehot_count",
+    "should_interpret",
+]
+
+
+def should_interpret(interpret: bool | None = None) -> bool:
+    """Pallas interpret mode: forced value, else True iff not running on TPU."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def glcm_pallas(
+    img: jax.Array,
+    levels: int,
+    d: int = 1,
+    theta: int = 0,
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    copies: int = DEFAULT_COPIES,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """GLCM of a quantized 2-D image via the pair-stream voting kernel.
+
+    Pair extraction (paper Eq. (2) addressing) happens as fused XLA slices;
+    voting happens in the Pallas kernel. Returns (L, L) int32 counts.
+    """
+    assoc, rf = _ref.pair_planes(img, d, theta)
+    return glcm_vote_pallas(
+        assoc.reshape(-1).astype(jnp.int32),
+        rf.reshape(-1).astype(jnp.int32),
+        levels=levels,
+        chunk=chunk,
+        copies=copies,
+        interpret=should_interpret(interpret),
+    )
+
+
+def glcm_pallas_multi(
+    img: jax.Array,
+    levels: int,
+    pairs: tuple[tuple[int, int], ...],
+    *,
+    tile_h: int | None = None,
+    copies: int = 1,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Multi-offset GLCM in ONE image pass via the fused tiled kernel.
+
+    ``pairs`` are (d, theta) tuples; returns (len(pairs), L, L) int32.
+    ``tile_h`` defaults to max(8, largest dy) rounded up to 8.
+    """
+    offsets = tuple(_ref.glcm_offsets(d, t) for d, t in pairs)
+    max_dy = max((dy for dy, _ in offsets), default=1)
+    if tile_h is None:
+        tile_h = max(8, -(-max_dy // 8) * 8)
+    return glcm_fused_pallas(
+        img,
+        levels=levels,
+        offsets=offsets,
+        tile_h=tile_h,
+        copies=copies,
+        interpret=should_interpret(interpret),
+    )
+
+
+def histogram(
+    values: jax.Array,
+    levels: int,
+    *,
+    chunk: int = 2048,
+    copies: int = 4,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Exact level counts via the Pallas histogram kernel."""
+    return histogram_pallas(
+        values,
+        levels=levels,
+        chunk=chunk,
+        copies=copies,
+        interpret=should_interpret(interpret),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes",))
+def onehot_count(
+    indices: jax.Array,
+    num_classes: int,
+    weights: jax.Array | None = None,
+) -> jax.Array:
+    """Conflict-free (optionally weighted) class counting over the last axis.
+
+    The paper-derived primitive: instead of scatter-adding into a count
+    vector (serialized under contention), build the one-hot matrix and
+    REDUCE — on TPU this is a matmul/sum the MXU/VPU performs without
+    read-modify-write hazards. Shapes: indices (..., K) int → (..., C).
+    """
+    idx = indices.astype(jnp.int32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, idx.shape + (num_classes,), idx.ndim)
+    onehot = (idx[..., None] == iota)
+    if weights is not None:
+        oh = onehot.astype(weights.dtype) * weights[..., None]
+    else:
+        oh = onehot.astype(jnp.float32)
+    return oh.sum(axis=-2)

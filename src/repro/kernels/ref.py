@@ -1,0 +1,146 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground-truth implementations the kernels are tested against
+(``tests/test_glcm_kernel.py`` sweeps shapes/dtypes and asserts allclose).
+They are deliberately written in the most obviously-correct vectorized form —
+a scatter-add — which is also the faithful TPU analogue of the paper's
+Scheme 1 (atomicAdd voting): XLA lowers a contended scatter to a serialized
+update loop, reproducing the conflict pathology the paper measures in
+Table II.
+
+Conventions (paper Eq. (2), row-major addressing ``addr = y*N + x``):
+
+    theta =   0° : ref_addr = assoc_addr + d          → (dy, dx) = ( 0, +d)
+    theta =  45° : ref_addr = assoc_addr + d*(N-1)    → (dy, dx) = (+d, -d)
+    theta =  90° : ref_addr = assoc_addr + d*N        → (dy, dx) = (+d,  0)
+    theta = 135° : ref_addr = assoc_addr + d*(N+1)    → (dy, dx) = (+d, +d)
+
+and the vote position (paper Eq. (3)): ``pos = f_ref * L + f_assoc`` — i.e.
+``P[ref_level, assoc_level] += 1``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "OFFSETS",
+    "glcm_offsets",
+    "pair_planes",
+    "glcm_reference",
+    "glcm_multi_reference",
+    "histogram_reference",
+    "onehot_count_reference",
+]
+
+# theta (degrees) -> (dy, dx) per paper Eq. (2)
+OFFSETS: dict[int, tuple[int, int]] = {
+    0: (0, 1),
+    45: (1, -1),
+    90: (1, 0),
+    135: (1, 1),
+}
+
+PAPER_THETAS = (0, 45, 90, 135)
+
+
+def glcm_offsets(d: int, theta: int) -> tuple[int, int]:
+    """Pixel offset (dy, dx) for distance ``d`` and direction ``theta``."""
+    if d < 1:
+        raise ValueError(f"distance d must be >= 1, got {d}")
+    try:
+        dy, dx = OFFSETS[theta]
+    except KeyError:
+        raise ValueError(f"theta must be one of {sorted(OFFSETS)}, got {theta}") from None
+    return d * dy, d * dx
+
+
+def pair_planes(img: jax.Array, d: int, theta: int) -> tuple[jax.Array, jax.Array]:
+    """Extract the aligned (assoc, ref) value planes for offset (d, theta).
+
+    Returns two equal-shape int arrays holding, for every valid associate
+    pixel, its own gray level and the gray level of the pixel at offset
+    ``(dy, dx)``. This is the paper's Eq. (2) addressing realized as XLA
+    slices (which stand in for the halo ``Pad`` of Eq. (8)/(9) — a shifted
+    view instead of an overlapping copy).
+    """
+    if img.ndim != 2:
+        raise ValueError(f"expected 2-D image, got shape {img.shape}")
+    h, w = img.shape
+    dy, dx = glcm_offsets(d, theta)
+    if dy >= h or abs(dx) >= w:
+        raise ValueError(f"offset ({dy},{dx}) exceeds image shape {img.shape}")
+    ys = slice(0, h - dy)
+    if dx >= 0:
+        assoc = img[ys, : w - dx]
+        ref = img[dy:, dx:]
+    else:
+        assoc = img[ys, -dx:]
+        ref = img[dy:, : w + dx]
+    return assoc, ref
+
+
+def glcm_reference(
+    img: jax.Array,
+    levels: int,
+    d: int = 1,
+    theta: int = 0,
+    *,
+    symmetric: bool = False,
+    normalize: bool = False,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Scheme-1 oracle: scatter-add voting. Returns (levels, levels).
+
+    ``P[i, j]`` counts pairs with ref level ``i`` and associate level ``j``
+    (paper Eq. (3): pos = ref * L + assoc).
+    """
+    assoc, ref = pair_planes(img, d, theta)
+    pos = (ref.astype(jnp.int32) * levels + assoc.astype(jnp.int32)).reshape(-1)
+    flat = jnp.zeros((levels * levels,), dtype).at[pos].add(1)
+    glcm = flat.reshape(levels, levels)
+    if symmetric:
+        glcm = glcm + glcm.T
+    if normalize:
+        glcm = glcm / jnp.maximum(glcm.sum(), 1)
+    return glcm
+
+
+def glcm_multi_reference(
+    img: jax.Array,
+    levels: int,
+    pairs: tuple[tuple[int, int], ...],
+    **kw,
+) -> jax.Array:
+    """Stacked GLCMs for several (d, theta) pairs → (len(pairs), L, L)."""
+    return jnp.stack([glcm_reference(img, levels, d, t, **kw) for d, t in pairs])
+
+
+def histogram_reference(values: jax.Array, levels: int, dtype=jnp.float32) -> jax.Array:
+    """Oracle for the histogram kernel (paper §II.A's 'image statistical
+    histogram' analogy): counts of each level in ``values``."""
+    v = values.reshape(-1).astype(jnp.int32)
+    return jnp.zeros((levels,), dtype).at[v].add(1)
+
+
+def onehot_count_reference(
+    indices: jax.Array,
+    num_classes: int,
+    weights: jax.Array | None = None,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Oracle for the shared conflict-free counting primitive: per-class
+    (optionally weighted) counts over the last axis of ``indices``; leading
+    axes are preserved. Used by the MoE router for load statistics."""
+    idx = indices.astype(jnp.int32)
+    out_shape = idx.shape[:-1] + (num_classes,)
+    flatb = idx.reshape(-1, idx.shape[-1])
+    if weights is None:
+        w = jnp.ones(flatb.shape, dtype)
+    else:
+        w = weights.reshape(flatb.shape).astype(dtype)
+    zeros = jnp.zeros((flatb.shape[0], num_classes), dtype)
+    rows = jnp.arange(flatb.shape[0])[:, None]
+    counts = zeros.at[rows, flatb].add(w)
+    return counts.reshape(out_shape)

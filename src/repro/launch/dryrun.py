@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile EVERY (architecture × input-shape)
+cell on the production meshes, print memory/cost analysis, and dump the
+roofline terms to reports/.
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+        --shape train_4k --mesh single                            # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi     # 512 chips
+
+The FIRST TWO LINES of this file force 512 host devices BEFORE any jax
+import — jax locks the device count at first init. Nothing here allocates:
+inputs are ShapeDtypeStructs and compilation is AOT.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, applicable, get_config
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, lower_cell
+
+REPORTS = Path(__file__).resolve().parents[3] / "reports" / "dryrun"
+
+
+PROBE_DEPTHS = (4, 8)    # unrolled accounting probes (see _probe_costs)
+
+
+def _probe_cfg(cfg, depth: int):
+    import dataclasses
+
+    kw = {"num_layers": depth, "scan_unroll": True}
+    if cfg.is_encoder_decoder:
+        kw["encoder_layers"] = depth
+    return dataclasses.replace(cfg, **kw)
+
+
+def _cell_costs(cfg, cell, mesh):
+    """cost_analysis + collective bytes of one lowered cell (compiled)."""
+    prog = build_cell(cfg, cell, mesh)
+    compiled = lower_cell(prog, mesh).compile()
+    cost = compiled.cost_analysis()
+    coll = rl.collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def _probe_costs(cfg, cell, mesh):
+    """Exact full-depth flops/bytes/collectives via two shallow UNROLLED
+    probes: XLA counts while-loop bodies once, so the rolled production
+    artifact under-reports per-layer cost by ~L×. Cost is affine in layer
+    count (identical bodies), so total(L) = base + per_layer·L extrapolates
+    exactly. (For hymba the 3 global layers are constant across probes and
+    the SWA count is L-3 — still affine in L.)"""
+    d1, d2 = PROBE_DEPTHS
+    f1, b1, c1 = _cell_costs(_probe_cfg(cfg, d1), cell, mesh)
+    f2, b2, c2 = _cell_costs(_probe_cfg(cfg, d2), cell, mesh)
+    L = cfg.num_layers
+
+    def extrap(v1, v2):
+        slope = (v2 - v1) / (d2 - d1)
+        return max(v1 + slope * (L - d1), 0.0)
+
+    flops = extrap(f1, f2)
+    byts = extrap(b1, b2)
+    coll = {k: int(extrap(c1[k], c2[k])) for k in c1}
+    return flops, byts, coll
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *, save: bool = True,
+             verbose: bool = True, probes: bool = True,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    import dataclasses
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi2x16x16" if multi_pod else "single16x16"
+    chips = mesh.size
+
+    # 1) The PRODUCTION artifact: rolled scans + remat. Proves the cell
+    #    lowers, compiles, and fits HBM on this mesh.
+    t0 = time.time()
+    prog = build_cell(cfg, cell, mesh)
+    lowered = lower_cell(prog, mesh)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+
+    # 2) Accounting probes: exact per-layer flops / bytes / collectives.
+    #    (The multi-pod pass proves the 'pod' axis shards; its roofline is
+    #    not reported, so probes can be skipped there.)
+    t0 = time.time()
+    if probes:
+        flops, byts, coll = _probe_costs(cfg, cell, mesh)
+    else:
+        cost = compiled.cost_analysis()
+        flops = float(cost.get("flops", 0.0))
+        byts = float(cost.get("bytes accessed", 0.0))
+        coll = rl.collective_bytes(compiled.as_text())
+    t_probe = time.time() - t0
+
+    roof = rl.Roofline(
+        arch=cfg.name, cell=cell.name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts, coll_bytes=coll,
+        model_flops=rl.model_flops(cfg, cell),
+    )
+
+    out = {
+        "status": "ok",
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "probe_s": round(t_probe, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        **roof.to_dict(),
+    }
+    # Per-device HBM = (args + temp) / 1 (memory_analysis is per-device).
+    args_b = out["memory"]["argument_bytes"] or 0
+    temp_b = out["memory"]["temp_bytes"] or 0
+    out["memory"]["per_device_gb"] = round((args_b + temp_b) / 2**30, 3)
+    out["fits_16gb_hbm"] = (args_b + temp_b) < 16 * 2**30
+
+    if verbose:
+        print(f"[{arch} × {shape} × {mesh_name}] lower {t_lower:.0f}s "
+              f"compile {t_compile:.0f}s probes {t_probe:.0f}s")
+        print(f"  memory_analysis: args={args_b/2**30:.2f}GiB "
+              f"temp={temp_b/2**30:.2f}GiB per device "
+              f"(fits 16GiB: {out['fits_16gb_hbm']})")
+        print(f"  cost_analysis: flops={roof.hlo_flops:.3e} "
+              f"bytes={roof.hlo_bytes:.3e}")
+        print(f"  collectives: { {k: f'{v/2**20:.1f}MiB' for k, v in roof.coll_bytes.items() if v} }")
+        print(f"  roofline: compute={roof.t_compute*1e3:.3f}ms "
+              f"memory={roof.t_memory*1e3:.3f}ms "
+              f"collective={roof.t_collective*1e3:.3f}ms "
+              f"→ {roof.bottleneck}-bound, useful={roof.useful_ratio:.3f}")
+
+    if save:
+        REPORTS.mkdir(parents=True, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        fn = REPORTS / f"{arch}__{shape}__{mesh_name}{suffix}.json"
+        fn.write_text(json.dumps(out, indent=2))
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCHS)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--continue-on-error", action="store_true")
+    ap.add_argument("--skip-probes-multi", action="store_true", default=True,
+                    help="multi-pod pass: compile+memory proof only")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, (
+        f"dry-run needs 512 forced host devices, got {len(jax.devices())}")
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results, failures = [], []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            if not applicable(cfg, SHAPES[shape]):
+                print(f"[{arch} × {shape}] SKIP (long-context needs "
+                      f"sub-quadratic attention; see DESIGN.md §4)")
+                continue
+            for mp in meshes:
+                try:
+                    results.append(run_cell(arch, shape, mp,
+                                            probes=not (mp and args.skip_probes_multi)))
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"[{arch} × {shape} × {'multi' if mp else 'single'}] "
+                          f"FAILED: {e}")
+                    traceback.print_exc()
+                    if not args.continue_on_error:
+                        return 1
+
+    print("\n=== ROOFLINE TABLE ===")
+    print(rl.format_table(results))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        return 1
+    print(f"\nAll {len(results)} cells lowered + compiled successfully.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,222 @@
+"""Step builders + abstract input specs for every (arch × shape) cell.
+
+``build_cell(cfg, cell, mesh)`` returns everything the dry-run (and the real
+launchers) need:  a step callable, ShapeDtypeStruct args, and in/out
+NamedShardings. Shapes follow the assignment:
+
+  train_4k     train_step(params, opt_state, batch)      seq 4096,  B 256
+  prefill_32k  prefill_step(params, batch)               seq 32768, B 32
+  decode_32k   serve_step(params, caches, token, pos)    KV 32768,  B 128
+  long_500k    serve_step with KV 524288, B 1            (sub-quadratic only)
+
+No arrays are allocated here — everything is ShapeDtypeStruct/eval_shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeCell
+from repro.models import build_model
+from repro.models.common import dtype_of
+from repro.sharding import partition as shd
+from repro.train.optimizer import make_optimizer
+
+# Static stub length of the encoder memory for enc-dec decode cells
+# (whisper's real encoder emits 1500 frames; we use a 128-multiple).
+DECODE_T_ENC = 4096
+
+
+@dataclasses.dataclass
+class CellProgram:
+    name: str
+    fn: Callable
+    args: tuple                 # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    rules: dict | None = None   # logical-axis rules active during tracing
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_structs(cfg, cell: ShapeCell) -> dict:
+    b, t = cell.global_batch, cell.seq_len
+    cdt = dtype_of(cfg.compute_dtype)
+    batch = {"tokens": _sds((b, t), jnp.int32)}
+    if cfg.embeds_input and not cfg.is_encoder_decoder:
+        batch["embeds"] = _sds((b, t, cfg.d_model), cdt)
+    if cfg.is_encoder_decoder:
+        batch["enc_embeds"] = _sds((b, t, cfg.d_model), cdt)
+    return batch
+
+
+def abstract_params(cfg):
+    api = build_model(cfg)
+    return jax.eval_shape(lambda: api.init(jax.random.key(0)))
+
+
+def make_train_step(cfg, total_steps: int = 100_000):
+    api = build_model(cfg)
+    ocfg, oinit, oupdate = make_optimizer(cfg.optimizer, total_steps=total_steps)
+    accum = max(cfg.grad_accum, 1)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p, b):
+            return api.loss(p, b)
+
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            # Gradient accumulation over microbatches: bounds the backward
+            # transients (one big-arch layer's differentiation peaks tens of
+            # GiB/device at the full global batch). Accumulate in the param
+            # dtype scaled by 1/accum.
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                (loss, _), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b_: a + (b_ / accum).astype(a.dtype), gsum, g)
+                return (gsum, lsum + loss / accum), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+            (grads, loss), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros(())), micro,
+                unroll=True if cfg.scan_unroll else 1)
+            metrics = {"nll": loss, "aux": jnp.zeros(())}
+        new_p, new_s, om = oupdate(ocfg, grads, opt_state, params)
+        return new_p, new_s, {"loss": loss, **metrics, **om}
+
+    return train_step, oinit
+
+
+def _cell_rules(cfg, mesh):
+    from repro.sharding.logical import default_rules
+
+    rules = default_rules(mesh)
+    if cfg.attn_layout == "heads_tp":
+        rules["seq"] = None
+        rules["kv_seq"] = None
+        rules["heads"] = "model"
+    return rules
+
+
+def build_cell(cfg, cell: ShapeCell, mesh: Mesh) -> CellProgram:
+    api = build_model(cfg)
+    params_s = abstract_params(cfg)
+    pspecs = shd.param_specs(cfg, params_s)
+    p_shard = shd.named(mesh, pspecs)
+    div = shd.batch_size_divisor(mesh)
+    name = f"{cfg.name}×{cell.name}"
+
+    if cell.kind == "train":
+        step, oinit = make_train_step(cfg)
+        opt_s = jax.eval_shape(oinit, params_s)
+        ospecs = shd.optimizer_state_specs(pspecs, opt_s)
+        o_shard = shd.named(mesh, ospecs)
+        batch_s = _batch_structs(cfg, cell)
+        b_shard = shd.named(mesh, {k: v for k, v in
+                                   shd.batch_specs(
+                                       cfg, mesh,
+                                       seq_shard=cfg.attn_layout != "heads_tp"
+                                   ).items()
+                                   if k in batch_s})
+        metrics_shard = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()),
+            {"loss": 0, "nll": 0, "aux": 0, "grad_norm": 0, "lr": 0})
+        return CellProgram(
+            name=name,
+            fn=step,
+            args=(params_s, opt_s, batch_s),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, metrics_shard),
+            donate_argnums=(0, 1),
+            rules=_cell_rules(cfg, mesh),
+        )
+
+    if cell.kind == "prefill":
+        batch_s = _batch_structs(cfg, cell)
+        b_shard = shd.named(mesh, {k: v for k, v in
+                                   shd.batch_specs(
+                                       cfg, mesh,
+                                       seq_shard=cfg.attn_layout != "heads_tp"
+                                   ).items()
+                                   if k in batch_s})
+
+        def prefill_step(params, batch):
+            return api.prefill(params, batch, s_cache=cell.seq_len)
+
+        caches_s = jax.eval_shape(prefill_step, params_s, batch_s)[1]
+        c_spec = shd.cache_specs(cfg, mesh, caches_s, batch_sharded=True)
+        out_shard = (
+            NamedSharding(mesh, shd.logits_spec(cfg, mesh)),
+            shd.named(mesh, c_spec),
+        )
+        return CellProgram(
+            name=name,
+            fn=prefill_step,
+            args=(params_s, batch_s),
+            in_shardings=(p_shard, b_shard),
+            out_shardings=out_shard,
+            rules=_cell_rules(cfg, mesh),
+        )
+
+    # decode cells
+    b = cell.global_batch
+    batch_sharded = (b % div == 0) and b >= div
+    rules = _cell_rules(cfg, mesh)
+    if not batch_sharded:   # long_500k: batch=1 stays replicated
+        rules["batch"] = None
+    caches_s = jax.eval_shape(
+        lambda: api.init_caches(b, cell.seq_len, DECODE_T_ENC))
+    c_spec = shd.cache_specs(cfg, mesh, caches_s, batch_sharded=batch_sharded)
+    c_shard = shd.named(mesh, c_spec)
+    tok_spec, pos_spec = shd.decode_token_specs(cfg, mesh, batch_sharded)
+    token_s = _sds((b, 1), jnp.int32)
+    pos_s = _sds((b,), jnp.int32)
+
+    def serve_step(params, caches, token, pos):
+        return api.decode_step(params, caches, token, pos)
+
+    out_shard = (
+        NamedSharding(mesh, shd.logits_spec(cfg, mesh, batch_sharded)),
+        c_shard,
+    )
+    return CellProgram(
+        name=name,
+        fn=serve_step,
+        args=(params_s, caches_s, token_s, pos_s),
+        in_shardings=(p_shard, c_shard, NamedSharding(mesh, tok_spec),
+                      NamedSharding(mesh, pos_spec)),
+        out_shardings=out_shard,
+        donate_argnums=(1,),
+        rules=rules,
+    )
+
+
+def lower_cell(prog: CellProgram, mesh: Mesh):
+    """jit + lower inside the mesh + logical-axis contexts."""
+    from repro.sharding.logical import default_rules, logical_axis_rules
+
+    jitted = jax.jit(
+        prog.fn,
+        in_shardings=prog.in_shardings,
+        out_shardings=prog.out_shardings,
+        donate_argnums=prog.donate_argnums,
+    )
+    rules = prog.rules if prog.rules is not None else default_rules(mesh)
+    with mesh, logical_axis_rules(mesh, rules):
+        return jitted.lower(*prog.args)

@@ -1,0 +1,7 @@
+"""Composable model stack: attention (GQA/SWA/flash-chunked), MoE (conflict-
+free one-hot dispatch — the paper primitive), Mamba2 SSD, Hymba hybrid,
+whisper enc-dec, and the unified ``build_model`` API."""
+
+from repro.models.model import ModelApi, build_model, describe
+
+__all__ = ["ModelApi", "build_model", "describe"]

@@ -1,0 +1,208 @@
+"""Attention: GQA projections + two SDPA paths.
+
+``sdpa_chunked``  — online-softmax attention scanned over KV chunks (the
+    "flash" pattern in pure jnp): the (T×S) score matrix is never
+    materialized, which is what makes ``prefill_32k`` lowerable, and it is
+    head-count-agnostic so context-parallel sharding (Q-sequence over the
+    'model' axis) works for 9/15/25/56-head archs without padding.
+
+``sdpa_direct``   — unchunked masked attention for decode (T == 1..few):
+    scores are (B, KV, G, T, S); at decode sizes this is KBs-MBs and XLA's
+    all-reduce over a sequence-sharded S handles the flash-decoding combine.
+
+Masking is position-based: q_pos/k_pos are global token positions, so causal,
+sliding-window (per-layer window, possibly dynamic), cache-validity and
+padding masks are all the same predicate. k_pos < 0 marks invalid slots.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init, split_keys
+from repro.models.layers import apply_rope
+from repro.sharding.logical import constrain
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg, key, *, cross: bool = False) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    ks = split_keys(key, ["wq", "wk", "wv", "wo"])
+    return {
+        "wq": dense_init(ks["wq"], (d, h, dh), 0, dt),
+        "wk": dense_init(ks["wk"], (d, kv, dh), 0, dt),
+        "wv": dense_init(ks["wv"], (d, kv, dh), 0, dt),
+        "wo": dense_init(ks["wo"], (h, dh, d), 0, dt).reshape(h, dh, d),
+    }
+
+
+def project_q(cfg, p: Params, x: jax.Array, positions: jax.Array | None) -> jax.Array:
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(x.dtype))
+    if cfg.use_rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def project_kv(cfg, p: Params, x: jax.Array, positions: jax.Array | None):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.use_rope and positions is not None:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def output_proj(p: Params, y: jax.Array) -> jax.Array:
+    return jnp.einsum("bthk,hkd->btd", y, p["wo"].astype(y.dtype))
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window) -> jax.Array:
+    """(B, T, S) boolean validity. window may be a traced scalar (hymba's
+    per-layer window rides through lax.scan); window <= 0 means unlimited."""
+    qp = q_pos[:, :, None]
+    kp = k_pos[:, None, :]
+    ok = kp >= 0  # invalid/unwritten cache slots carry k_pos = -1
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        ok &= jnp.where(w > 0, qp - kp < w, True)
+    return ok
+
+
+def _split_heads(q: jax.Array, kv_heads: int) -> jax.Array:
+    """(B, T, H, D) → (B, T, KV, G, D) GQA grouping (no KV repetition)."""
+    b, t, h, d = q.shape
+    return q.reshape(b, t, kv_heads, h // kv_heads, d)
+
+
+def sdpa_direct(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    *,
+    causal: bool = True,
+    window=None,
+) -> jax.Array:
+    """q: (B,T,H,D), k/v: (B,S,KV,D), *_pos: (B,T)/(B,S) → (B,T,H,D)."""
+    b, t, h, d = q.shape
+    kv = k.shape[2]
+    qg = _split_heads(q, kv)
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, k).astype(jnp.float32) * scale
+    s = constrain(s, "batch", "heads", None, None, "kv_seq")
+    ok = _mask(q_pos, k_pos, causal=causal, window=window)  # (B,T,S)
+    s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    y = jnp.einsum("bkgts,bskd->btkgd", w.astype(v.dtype), v)
+    return y.reshape(b, t, h, d)
+
+
+def sdpa_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    *,
+    causal: bool = True,
+    window=None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks (flash pattern, pure jnp)."""
+    b, t, h, d = q.shape
+    kv = k.shape[2]
+    s_len = k.shape[1]
+    if s_len <= chunk:
+        return sdpa_direct(q, k, v, q_pos, k_pos, causal=causal, window=window)
+
+    pad = (-s_len) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    n = k.shape[1] // chunk
+    kc = jnp.moveaxis(k.reshape(b, n, chunk, kv, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n, chunk, kv, d), 1, 0)
+    pc = jnp.moveaxis(k_pos.reshape(b, n, chunk), 1, 0)
+
+    qg = constrain(_split_heads(q, kv), "batch", "seq", "heads", None, None)
+    kc = constrain(kc, None, "batch", None, "heads", None)  # K: gathered
+    vc = constrain(vc, None, "batch", None, "heads", None)  # (context) or
+    pc = constrain(pc, None, "batch", None)                 # local (heads_tp)
+    scale = 1.0 / math.sqrt(d)
+
+    # Flash-faithful backward: scores/probabilities are RECOMPUTED in the
+    # bwd pass (jax.checkpoint on the chunk body) instead of saving the
+    # (B,KV,G,T,chunk) f32 residuals per chunk — this is what flash
+    # attention does on GPU and it cuts ~10 GiB/device of bwd residuals on
+    # the 56-head archs (measured, see EXPERIMENTS.md §Perf).
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, pb = xs
+        s = jnp.einsum("btkgd,bskd->bkgts", qg, kb).astype(jnp.float32) * scale
+        s = constrain(s, "batch", "heads", None, "seq", None)
+        ok = _mask(q_pos, pb, causal=causal, window=window)
+        s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p_ = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p_.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgts,bskd->bkgtd", p_.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    g = h // kv
+    m0 = constrain(jnp.full((b, kv, g, t), NEG_INF, jnp.float32),
+                   "batch", "heads", None, "seq")
+    l0 = constrain(jnp.zeros((b, kv, g, t), jnp.float32),
+                   "batch", "heads", None, "seq")
+    a0 = constrain(jnp.zeros((b, kv, g, t, d), jnp.float32),
+                   "batch", "heads", None, "seq", None)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    y = acc / jnp.maximum(l, 1e-30)[..., None]
+    y = jnp.moveaxis(y, 3, 1)  # (B, T, KV, G, D)
+    return y.reshape(b, t, h, d).astype(q.dtype)
+
+
+def self_attention(
+    cfg,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    window=None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Full self-attention block for train/prefill (causal)."""
+    q = project_q(cfg, p, x, positions)
+    k, v = project_kv(cfg, p, x, positions)
+    y = sdpa_chunked(q, k, v, positions, positions, causal=True, window=window,
+                     chunk=chunk)
+    return output_proj(p, y)
+
+
+def cross_attention(
+    cfg,
+    p: Params,
+    x: jax.Array,
+    memory: jax.Array,
+    q_positions: jax.Array,
+    m_positions: jax.Array,
+    *,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Encoder-decoder cross attention (non-causal, no window)."""
+    q = project_q(cfg, p, x, None)  # whisper: no rope
+    k, v = project_kv(cfg, p, memory, None)
+    y = sdpa_chunked(q, k, v, q_positions, m_positions, causal=False, chunk=chunk)
+    return output_proj(p, y)

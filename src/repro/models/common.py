@@ -1,0 +1,64 @@
+"""Shared model utilities: initializers, dtype policy, param tooling.
+
+Params are plain nested dicts of jax.Arrays ("path → leaf"); sharding rules
+pattern-match on the dict paths (sharding/partition.py), so naming here is a
+contract: keep keys stable.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal fan-in initialization (std = 1/sqrt(fan_in))."""
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32) -> jax.Array:
+    return 0.02 * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(int(x.size * x.dtype.itemsize) for x in jax.tree.leaves(params))
+
+
+def tree_paths(params: Params, prefix: str = "") -> list[tuple[str, jax.Array]]:
+    """Flatten to ("a/b/c", leaf) pairs (stacked-layer leaves keep one path)."""
+    out = []
+    for k, v in params.items():
+        p = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out.extend(tree_paths(v, p))
+        else:
+            out.append((p, v))
+    return out
+
+
+def cast_tree(params: Params, dtype) -> Params:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        params,
+    )
+
+
+def split_keys(key, names: list[str]) -> dict[str, jax.Array]:
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))

@@ -1,0 +1,246 @@
+"""Encoder-decoder backbone (whisper-medium). The audio frontend (mel +
+conv) is a STUB per the assignment: the encoder consumes precomputed frame
+embeddings (B, T_enc, d_model) from ``input_specs()``.
+
+Encoder: non-causal self-attention + GELU MLP, sinusoidal positions.
+Decoder: causal self-attention + cross-attention + GELU MLP.
+Decode caches: per-layer self KV (grows) + cross KV (static, built once).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    cross_attention,
+    init_attention,
+    output_proj,
+    project_kv,
+    project_q,
+    sdpa_chunked,
+    sdpa_direct,
+)
+from repro.models.common import Params, dtype_of, split_keys
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    embed_tokens,
+    init_embeddings,
+    init_mlp,
+    init_norm,
+    sinusoidal_positions,
+    unembed,
+)
+from repro.sharding.logical import constrain
+
+
+def init_encoder_layer(cfg, key) -> Params:
+    ks = split_keys(key, ["ln1", "attn", "ln2", "mlp"])
+    return {
+        "ln1": init_norm(cfg, ks["ln1"]),
+        "attn": init_attention(cfg, ks["attn"]),
+        "ln2": init_norm(cfg, ks["ln2"]),
+        "mlp": init_mlp(cfg, ks["mlp"]),
+    }
+
+
+def init_decoder_layer(cfg, key) -> Params:
+    ks = split_keys(key, ["ln1", "self", "ln2", "cross", "ln3", "mlp"])
+    return {
+        "ln1": init_norm(cfg, ks["ln1"]),
+        "self_attn": init_attention(cfg, ks["self"]),
+        "ln2": init_norm(cfg, ks["ln2"]),
+        "cross_attn": init_attention(cfg, ks["cross"]),
+        "ln3": init_norm(cfg, ks["ln3"]),
+        "mlp": init_mlp(cfg, ks["mlp"]),
+    }
+
+
+def init_encdec_params(cfg, key) -> Params:
+    ks = split_keys(key, ["embed", "enc", "dec", "enc_final", "dec_final"])
+    enc_keys = jax.random.split(ks["enc"], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks["dec"], cfg.num_layers)
+    return {
+        "embeddings": init_embeddings(cfg, ks["embed"]),
+        "encoder": jax.vmap(lambda k: init_encoder_layer(cfg, k))(enc_keys),
+        "decoder": jax.vmap(lambda k: init_decoder_layer(cfg, k))(dec_keys),
+        "enc_final": init_norm(cfg, ks["enc_final"]),
+        "dec_final": init_norm(cfg, ks["dec_final"]),
+    }
+
+
+def encode(cfg, params: Params, enc_embeds: jax.Array, *, chunk: int = 1024,
+           remat: bool | None = None) -> jax.Array:
+    """Frame embeddings (B, T_enc, D) → encoder memory (B, T_enc, D)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    b, t, _ = enc_embeds.shape
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    x = enc_embeds.astype(cdt) + sinusoidal_positions(pos, cfg.d_model).astype(cdt)
+
+    def body(xc, pi):
+        h = apply_norm(cfg, pi["ln1"], xc)
+        q = project_q(cfg, pi["attn"], h, None)
+        k, v = project_kv(cfg, pi["attn"], h, None)
+        att = sdpa_chunked(q, k, v, pos, pos, causal=False, chunk=chunk)
+        xc = xc + output_proj(pi["attn"], att)
+        xc = xc + apply_mlp(cfg, pi["mlp"], apply_norm(cfg, pi["ln2"], xc))
+        return constrain(xc, "batch", "seq", None), None
+
+    if remat if remat is not None else cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["encoder"],
+                        unroll=True if cfg.scan_unroll else 1)
+    return apply_norm(cfg, params["enc_final"], x)
+
+
+def _decoder_stack(cfg, params, x, dpos, memory, mpos, *, chunk, remat):
+    # PERF (H2, EXPERIMENTS.md §Perf): the encoder memory leaves `encode`
+    # sequence-sharded over 'model'; every decoder layer's cross-attention
+    # projects K/V from it, which made GSPMD all-gather the memory once PER
+    # LAYER inside the scan (24× the bytes). Hoisting one explicit gather
+    # (constrain to batch-only sharding) before the scan collapses those
+    # into a single all-gather; the replicated activation costs only
+    # B_loc×T×D bytes of HBM.
+    memory = constrain(memory, "batch", None, None)
+
+    def body(xc, pi):
+        h = apply_norm(cfg, pi["ln1"], xc)
+        q = project_q(cfg, pi["self_attn"], h, None)
+        k, v = project_kv(cfg, pi["self_attn"], h, None)
+        att = sdpa_chunked(q, k, v, dpos, dpos, causal=True, chunk=chunk)
+        xc = xc + output_proj(pi["self_attn"], att)
+        h2 = apply_norm(cfg, pi["ln2"], xc)
+        xc = xc + cross_attention(cfg, pi["cross_attn"], h2, memory, dpos, mpos,
+                                  chunk=chunk)
+        xc = xc + apply_mlp(cfg, pi["mlp"], apply_norm(cfg, pi["ln3"], xc))
+        return constrain(xc, "batch", "seq", None), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["decoder"],
+                        unroll=True if cfg.scan_unroll else 1)
+    return apply_norm(cfg, params["dec_final"], x)
+
+
+def encdec_forward(cfg, params: Params, batch: dict, *, chunk: int = 1024):
+    """batch: enc_embeds (B,T_enc,D) + tokens (B,T_dec) → (logits, aux=0)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    memory = encode(cfg, params, batch["enc_embeds"], chunk=chunk)
+    b, tm = memory.shape[0], memory.shape[1]
+    mpos = jnp.broadcast_to(jnp.arange(tm, dtype=jnp.int32), (b, tm))
+    tok = batch["tokens"]
+    td = tok.shape[1]
+    dpos = jnp.broadcast_to(jnp.arange(td, dtype=jnp.int32), (b, td))
+    x = embed_tokens(cfg, params["embeddings"], tok, cdt)
+    x = x + sinusoidal_positions(dpos, cfg.d_model).astype(cdt)
+    x = _decoder_stack(cfg, params, x, dpos, memory, mpos, chunk=chunk,
+                       remat=cfg.remat)
+    return unembed(cfg, params["embeddings"], x), jnp.zeros((), jnp.float32)
+
+
+def encdec_loss(cfg, params: Params, batch: dict, *, chunk: int = 1024):
+    from repro.models.transformer import shard_friendly_xent
+
+    logits, aux = encdec_forward(cfg, params, batch, chunk=chunk)
+    targets = batch["tokens"][:, 1:]
+    lg = logits[:, :-1, :].astype(jnp.float32)
+    nll = shard_friendly_xent(lg, targets)
+    return nll + aux, {"nll": nll, "aux": aux}
+
+
+def encdec_prefill(cfg, params: Params, batch: dict, *, s_cache: int | None = None,
+                   chunk: int = 1024):
+    """Encode + decoder prefill. Caches: self KV (padded to s_cache) and the
+    static cross KV of the encoder memory per layer."""
+    cdt = dtype_of(cfg.compute_dtype)
+    memory = encode(cfg, params, batch["enc_embeds"], chunk=chunk)
+    # PERF (H2): single hoisted memory gather — see _decoder_stack.
+    memory = constrain(memory, "batch", None, None)
+    b, tm = memory.shape[0], memory.shape[1]
+    mpos = jnp.broadcast_to(jnp.arange(tm, dtype=jnp.int32), (b, tm))
+    tok = batch["tokens"]
+    td = tok.shape[1]
+    sc = s_cache or td
+    dpos = jnp.broadcast_to(jnp.arange(td, dtype=jnp.int32), (b, td))
+    x = embed_tokens(cfg, params["embeddings"], tok, cdt)
+    x = x + sinusoidal_positions(dpos, cfg.d_model).astype(cdt)
+
+    def body(xc, pi):
+        h = apply_norm(cfg, pi["ln1"], xc)
+        q = project_q(cfg, pi["self_attn"], h, None)
+        k, v = project_kv(cfg, pi["self_attn"], h, None)
+        att = sdpa_chunked(q, k, v, dpos, dpos, causal=True, chunk=chunk)
+        xc = xc + output_proj(pi["self_attn"], att)
+        kc = jnp.zeros((b, sc) + k.shape[2:], k.dtype)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(jnp.zeros_like(kc), v, (0, 0, 0, 0))
+        pc = jnp.full((b, sc), -1, jnp.int32)
+        pc = jax.lax.dynamic_update_slice(pc, dpos.astype(jnp.int32), (0, 0))
+        h2 = apply_norm(cfg, pi["ln2"], xc)
+        ck, cv = project_kv(cfg, pi["cross_attn"], memory, None)
+        qx = project_q(cfg, pi["cross_attn"], h2, None)
+        xatt = sdpa_chunked(qx, ck, cv, dpos, mpos, causal=False, chunk=chunk)
+        xc = xc + output_proj(pi["cross_attn"], xatt)
+        xc = xc + apply_mlp(cfg, pi["mlp"], apply_norm(cfg, pi["ln3"], xc))
+        return (constrain(xc, "batch", "seq", None),
+                {"k": kc, "v": vc, "pos": pc, "ck": ck, "cv": cv})
+
+    x, caches = jax.lax.scan(body, x, params["decoder"],
+                             unroll=True if cfg.scan_unroll else 1)
+    x = apply_norm(cfg, params["dec_final"], x)
+    logits = unembed(cfg, params["embeddings"], x[:, -1:, :])[:, 0, :]
+    return logits, {"layers": caches, "mpos": mpos}
+
+
+def encdec_decode_step(cfg, params: Params, caches: dict, token: jax.Array,
+                       pos: jax.Array):
+    """One decoder step against self + cross caches."""
+    cdt = dtype_of(cfg.compute_dtype)
+    x = embed_tokens(cfg, params["embeddings"], token, cdt)
+    x = x + sinusoidal_positions(pos[:, None], cfg.d_model).astype(cdt)
+    b = x.shape[0]
+    bidx = jnp.arange(b)
+    mpos = caches["mpos"]
+
+    def body(x1, inp):
+        pi, ci = inp
+        h = apply_norm(cfg, pi["ln1"], x1)
+        q = project_q(cfg, pi["self_attn"], h, None)
+        k1, v1 = project_kv(cfg, pi["self_attn"], h, None)
+        sc = ci["k"].shape[1]
+        slot = jnp.minimum(pos, sc - 1)
+        kc = ci["k"].at[bidx, slot].set(k1[:, 0])
+        vc = ci["v"].at[bidx, slot].set(v1[:, 0])
+        pc = ci["pos"].at[bidx, slot].set(pos.astype(jnp.int32))
+        att = sdpa_direct(q, kc, vc, pos[:, None], pc, causal=True)
+        x1 = x1 + output_proj(pi["self_attn"], att)
+        h2 = apply_norm(cfg, pi["ln2"], x1)
+        qx = project_q(cfg, pi["cross_attn"], h2, None)
+        xatt = sdpa_direct(qx, ci["ck"], ci["cv"], pos[:, None], mpos, causal=False)
+        x1 = x1 + output_proj(pi["cross_attn"], xatt)
+        x1 = x1 + apply_mlp(cfg, pi["mlp"], apply_norm(cfg, pi["ln3"], x1))
+        return x1, {"k": kc, "v": vc, "pos": pc, "ck": ci["ck"], "cv": ci["cv"]}
+
+    x, new_layers = jax.lax.scan(body, x, (params["decoder"], caches["layers"]),
+                                 unroll=True if cfg.scan_unroll else 1)
+    x = apply_norm(cfg, params["dec_final"], x)
+    logits = unembed(cfg, params["embeddings"], x)[:, 0, :]
+    return logits, {"layers": new_layers, "mpos": mpos}
+
+
+def init_encdec_caches(cfg, batch: int, s_cache: int, t_enc: int, dtype) -> dict:
+    kvh, dh = cfg.num_kv_heads, cfg.head_dim_
+    L = cfg.num_layers
+    return {
+        "layers": {
+            "k": jnp.zeros((L, batch, s_cache, kvh, dh), dtype),
+            "v": jnp.zeros((L, batch, s_cache, kvh, dh), dtype),
+            "pos": jnp.full((L, batch, s_cache), -1, jnp.int32),
+            "ck": jnp.zeros((L, batch, t_enc, kvh, dh), dtype),
+            "cv": jnp.zeros((L, batch, t_enc, kvh, dh), dtype),
+        },
+        "mpos": jnp.zeros((batch, t_enc), jnp.int32),
+    }

@@ -1,0 +1,136 @@
+"""Core transformer layers: norms, embeddings, positions, MLP.
+
+All apply-functions are shape-polymorphic over leading batch/seq dims and
+compute in ``compute_dtype`` with f32 normalization statistics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init, embed_init, split_keys
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg, key, dim: int | None = None) -> Params:
+    dim = dim or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((dim,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((dim,), jnp.float32),
+                "bias": jnp.zeros((dim,), jnp.float32)}
+    if cfg.norm == "layernorm_nonparam":
+        return {}  # OLMo: no learnable affine
+    raise ValueError(cfg.norm)
+
+
+def apply_norm(cfg, p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if cfg.norm == "layernorm":
+            y = y * p["scale"] + p["bias"]
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding (padded vocab)
+# ---------------------------------------------------------------------------
+
+
+def init_embeddings(cfg, key) -> Params:
+    ks = split_keys(key, ["embed", "unembed"])
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Params = {"embed": embed_init(ks["embed"], (cfg.padded_vocab, cfg.d_model), dt)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(ks["unembed"], (cfg.d_model, cfg.padded_vocab), 0, dt)
+    return p
+
+
+def embed_tokens(cfg, p: Params, tokens: jax.Array, compute_dtype) -> jax.Array:
+    # take() on the padded table; ids are always < vocab_size <= padded_vocab.
+    return jnp.take(p["embed"], tokens, axis=0).astype(compute_dtype)
+
+
+def unembed(cfg, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, p["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, p["unembed"].astype(x.dtype))
+    # Mask padded vocab rows so they can never win / leak probability mass.
+    if cfg.padded_vocab != cfg.vocab_size:
+        neg = jnp.asarray(-1e9, logits.dtype)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(iota < cfg.vocab_size, logits, neg)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Positions: RoPE (rotate-half) and sinusoidal absolute
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, D); positions: broadcastable to (..., T)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, D/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., T, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jax.Array, dim: int) -> jax.Array:
+    """Absolute sinusoidal embeddings (whisper-style stub positions)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP: SwiGLU (llama-family) or GELU (whisper)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(cfg, key, d_ff: int | None = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    if cfg.activation == "swiglu":
+        ks = split_keys(key, ["w_gate", "w_up", "w_down"])
+        return {
+            "w_gate": dense_init(ks["w_gate"], (cfg.d_model, d_ff), 0, dt),
+            "w_up": dense_init(ks["w_up"], (cfg.d_model, d_ff), 0, dt),
+            "w_down": dense_init(ks["w_down"], (d_ff, cfg.d_model), 0, dt),
+        }
+    ks = split_keys(key, ["w_in", "w_out"])
+    return {
+        "w_in": dense_init(ks["w_in"], (cfg.d_model, d_ff), 0, dt),
+        "w_out": dense_init(ks["w_out"], (d_ff, cfg.d_model), 0, dt),
+    }
+
+
+def apply_mlp(cfg, p: Params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    if cfg.activation == "swiglu":
+        gate = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(dt))
+        up = jnp.einsum("...d,df->...f", x, p["w_up"].astype(dt))
+        return jnp.einsum("...f,fd->...d", jax.nn.silu(gate) * up, p["w_down"].astype(dt))
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["w_in"].astype(dt)))
+    return jnp.einsum("...f,fd->...d", h, p["w_out"].astype(dt))

@@ -1,0 +1,81 @@
+"""Unified model API: ``build_model(cfg)`` → a ModelApi of pure functions.
+
+    api = build_model(get_config("mixtral-8x7b"))
+    params = api.init(jax.random.key(0))
+    loss, metrics = api.loss(params, batch)                # train
+    logits, caches = api.prefill(params, batch)            # serving
+    logits, caches = api.decode_step(params, caches, tok, pos)
+
+``batch`` contents by family:
+  tokens-only archs:  {"tokens": (B, T) int32}
+  stub-frontend archs (llava/whisper): {"embeds"/"enc_embeds": (B,T,D),
+                                        "tokens": (B,T)}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.common import Params, dtype_of, param_count
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: Any
+    init: Callable[..., Params]
+    loss: Callable[..., tuple[jax.Array, dict]]
+    forward: Callable[..., tuple[jax.Array, jax.Array]]
+    prefill: Callable[..., tuple[jax.Array, Any]]
+    decode_step: Callable[..., tuple[jax.Array, Any]]
+    init_caches: Callable[..., Any]
+
+
+def build_model(cfg) -> ModelApi:
+    cfg.validate()
+    if cfg.is_encoder_decoder:
+        def init(key):
+            return encdec.init_encdec_params(cfg, key)
+
+        def init_caches(batch, s_cache, t_enc=None):
+            return encdec.init_encdec_caches(
+                cfg, batch, s_cache, t_enc or s_cache, dtype_of(cfg.compute_dtype))
+
+        return ModelApi(
+            cfg=cfg,
+            init=init,
+            loss=lambda p, b, **kw: encdec.encdec_loss(cfg, p, b, **kw),
+            forward=lambda p, b, **kw: encdec.encdec_forward(cfg, p, b, **kw),
+            prefill=lambda p, b, **kw: encdec.encdec_prefill(cfg, p, b, **kw),
+            decode_step=lambda p, c, t, pos: encdec.encdec_decode_step(cfg, p, c, t, pos),
+            init_caches=init_caches,
+        )
+
+    def init(key):
+        return transformer.init_lm_params(cfg, key)
+
+    def init_caches(batch, s_cache, t_enc=None):
+        # Meta tokens (hymba) live in the cache prefix.
+        return transformer.init_decode_caches(
+            cfg, batch, s_cache + cfg.meta_tokens, dtype_of(cfg.compute_dtype))
+
+    return ModelApi(
+        cfg=cfg,
+        init=init,
+        loss=lambda p, b, **kw: transformer.lm_loss(cfg, p, b, **kw),
+        forward=lambda p, b, **kw: transformer.lm_forward(cfg, p, b, **kw),
+        prefill=lambda p, b, **kw: transformer.lm_prefill(cfg, p, b, **kw),
+        decode_step=lambda p, c, t, pos: transformer.lm_decode_step(cfg, p, c, t, pos),
+        init_caches=init_caches,
+    )
+
+
+def describe(cfg) -> str:
+    api = build_model(cfg)
+    params = jax.eval_shape(lambda: api.init(jax.random.key(0)))
+    n = sum(int(jnp.prod(jnp.array(x.shape))) for x in jax.tree.leaves(params))
+    return f"{cfg.name}: {n/1e9:.3f}B params ({cfg.family})"

@@ -1,0 +1,188 @@
+"""Mixture-of-Experts layer (mixtral 8e / arctic 128e, top-2).
+
+THE PAPER CONNECTION (DESIGN.md §3): token→expert assignment counting and
+capacity-slot assignment is a *histogram with write conflicts* — the exact
+pathology the paper studies for GLCM voting (§II.A). Dispatch here uses the
+conflict-free one-hot formulation distilled from the paper's Scheme 2:
+
+  * router load statistics     → ``kernels.ops.onehot_count`` (one-hot
+    reduce instead of contended scatter);
+  * capacity-slot positions    → cumulative one-hot sums (prefix votes);
+  * dispatch/combine           → one-hot matmuls (MXU) with no scatter,
+    OR an index gather path ("gather" strategy) used in the perf
+    iterations — the einsum path is the paper-faithful conflict-free one.
+
+Two dispatch strategies (cfg.moe_dispatch):
+  "einsum"  GShard-style dense dispatch: D ∈ {0,1}^(T×E×C) one-hot tensor,
+            X_e = Dᵀ·X (conflict-free MXU voting). Exact same math as the
+            GLCM kernel's vote matmul.
+  "gather"  sort-free indexed gather: experts gather their tokens by
+            computed slot indices (no dispatch FLOPs; relies on XLA gather).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import onehot_count
+from repro.sharding.logical import constrain
+from repro.models.common import Params, dense_init, split_keys
+from repro.models.layers import apply_mlp, init_mlp
+
+NEG_INF = -1e9
+
+
+def init_moe(cfg, key) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = split_keys(key, ["router", "w_gate", "w_up", "w_down", "dense"])
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    p: Params = {
+        "router": dense_init(ks["router"], (d, e), 0, jnp.float32),
+        "w_gate": dense_init(ks["w_gate"], (e, d, f), 1, dt),
+        "w_up": dense_init(ks["w_up"], (e, d, f), 1, dt),
+        "w_down": dense_init(ks["w_down"], (e, f, d), 1, dt),
+    }
+    if cfg.moe_dense_residual:  # arctic: dense FFN in parallel with the MoE
+        p["dense"] = init_mlp(cfg, ks["dense"], d_ff=cfg.dense_residual_ff)
+    return p
+
+
+def _capacity(cfg, tokens: int) -> int:
+    cap = int(tokens * cfg.num_experts_per_tok * cfg.capacity_factor
+              / cfg.num_experts)
+    return max(cap, cfg.num_experts_per_tok)
+
+
+def route(cfg, p: Params, x: jax.Array):
+    """x (B,T,D) → top-k expert ids (B,T,K), gates (B,T,K), aux loss, load.
+
+    Load statistics use the paper's conflict-free counting primitive.
+    """
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, ids = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    gates = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balancing aux loss: E * Σ_e f_e · p̄_e, where f_e is
+    # the fraction of tokens whose TOP-1 lands on e (counted conflict-free).
+    top1_counts = onehot_count(ids[..., :1].reshape(x.shape[0], -1), cfg.num_experts)
+    f_e = top1_counts / jnp.maximum(top1_counts.sum(-1, keepdims=True), 1.0)
+    p_e = probs.mean(axis=1)
+    aux = cfg.num_experts * jnp.mean(jnp.sum(f_e * p_e, axis=-1))
+    load = onehot_count(ids.reshape(-1)[None, :], cfg.num_experts)[0]
+    return ids, gates.astype(x.dtype), aux, load
+
+
+def _slot_positions(ids_onehot: jax.Array) -> jax.Array:
+    """Position of each (token, k) vote within its expert's queue: an
+    exclusive prefix-sum of one-hot votes over the flattened (T·K) axis —
+    the 'which copy do I write to' rule of the paper's Scheme 2, made
+    deterministic. ids_onehot: (T*K, E) → (T*K,) int32 slots."""
+    prefix = jnp.cumsum(ids_onehot, axis=0) - ids_onehot
+    return jnp.sum(prefix * ids_onehot, axis=-1).astype(jnp.int32)
+
+
+def _experts_mlp(cfg, p: Params, xe: jax.Array) -> jax.Array:
+    """Batched expert FFN: xe (E, C, D) → (E, C, D)."""
+    dt = xe.dtype
+    gate = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(dt))
+    up = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(dt))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(gate) * up, p["w_down"].astype(dt))
+
+
+def apply_moe(cfg, p: Params, x: jax.Array):
+    """x (B,T,D) → (y (B,T,D), aux_loss). Capacity-dropped tokens pass
+    through the residual (and arctic's dense branch) only.
+
+    "einsum" groups by batch row (GShard groups) — dense one-hot dispatch,
+    the paper-faithful conflict-free voting matmul. "gather" flattens ALL
+    tokens and scatters/gathers into an EXPERT-PARALLEL (E, C, D) buffer
+    (sharded over 'model' via logical constraints) — the production path
+    for large expert counts, where the one-hot tensor would be O(2.5·T²)
+    bytes (measured on arctic train_4k; see EXPERIMENTS.md §Perf)."""
+    bsz, t, d = x.shape
+    ids, gates, aux, _ = route(cfg, p, x)
+    k = cfg.num_experts_per_tok
+    e = cfg.num_experts
+
+    if cfg.moe_dispatch == "einsum":
+        cap = _capacity(cfg, t)
+        ids_f = ids.reshape(bsz, t * k)
+        gates_f = gates.reshape(bsz, t * k)
+
+        def per_batch(xb, idb, gb):
+            # One-hot expert assignment for each (token, k) vote: (T*K, E).
+            eh = jax.nn.one_hot(idb, e, dtype=jnp.int32)
+            slots = _slot_positions(eh)                 # (T*K,)
+            keep = slots < cap                          # capacity overflow drops
+            gb = jnp.where(keep, gb, 0.0)
+            # Dispatch tensor D (T*K, E, C) — one-hot over (expert, slot);
+            # X_e = Dᵀ X is the conflict-free vote matmul (paper Scheme 2).
+            slot_oh = jax.nn.one_hot(jnp.where(keep, slots, cap), cap + 1,
+                                     dtype=xb.dtype)[:, :cap]           # (T*K, C)
+            disp = eh.astype(xb.dtype)[:, :, None] * slot_oh[:, None, :]
+            xrep = jnp.repeat(xb, k, axis=0)                            # (T*K, D)
+            xe = jnp.einsum("tec,td->ecd", disp, xrep)
+            ye = _experts_mlp(cfg, p, xe)
+            comb = disp * gb[:, None, None].astype(xb.dtype)
+            y = jnp.einsum("tec,ecd->td", comb, ye)                     # (T*K, D)
+            return y.reshape(t, k, d).sum(axis=1)
+
+        y = jax.vmap(per_batch)(x, ids_f, gates_f).reshape(bsz, t, d)
+    else:
+        # "gather": per-row groups (GShard groups = batch rows), indexed
+        # scatter/gather into (E, C, D) buffers. A flattened global-token
+        # variant was measured WORSE (GSPMD cannot partition the scatter
+        # between token-sharded updates and expert-sharded operands and
+        # replicates both — +80 GiB/device on arctic; see §Perf log).
+        cap = _capacity(cfg, t)
+        ids_f = ids.reshape(bsz, t * k)
+        gates_f = gates.reshape(bsz, t * k)
+
+        def per_batch_gather(xb, idb, gb):
+            eh = jax.nn.one_hot(idb, e, dtype=jnp.int32)
+            slots = _slot_positions(eh)
+            keep = slots < cap
+            gb = jnp.where(keep, gb, 0.0)
+            flat_slot = jnp.where(keep, idb * cap + slots, e * cap)
+            xrep = jnp.repeat(xb, k, axis=0)
+            buf = jnp.zeros((e * cap + 1, xb.shape[-1]), xb.dtype)
+            buf = buf.at[flat_slot].set(xrep, mode="drop")
+            ye = _experts_mlp(cfg, p, buf[: e * cap].reshape(e, cap, -1))
+            back = jnp.concatenate(
+                [ye.reshape(e * cap, -1), jnp.zeros((1, xb.shape[-1]), xb.dtype)]
+            )[flat_slot]
+            y = (back * gb[:, None].astype(xb.dtype)).reshape(t, k, -1).sum(axis=1)
+            return y
+
+        y = jax.vmap(per_batch_gather)(x, ids_f, gates_f).reshape(bsz, t, d)
+
+    if cfg.moe_dense_residual:
+        y = y + apply_mlp(cfg, p["dense"], x)
+    return y, aux * cfg.router_aux_coef
+
+
+def moe_dense_oracle(cfg, p: Params, x: jax.Array) -> jax.Array:
+    """Compute-everything oracle: every expert runs every token, outputs are
+    one-hot-combined: y = Σ_k gate_k · FFN_{id_k}(x). No capacity drops.
+    Used by tests to validate both dispatch strategies (with capacity high
+    enough that nothing drops, apply_moe must match this exactly)."""
+    ids, gates, _, _ = route(cfg, p, x)
+    dt = x.dtype
+
+    def one_expert(ee):
+        gate = jnp.einsum("btd,df->btf", x, p["w_gate"][ee].astype(dt))
+        up = jnp.einsum("btd,df->btf", x, p["w_up"][ee].astype(dt))
+        return jnp.einsum("btf,fd->btd", jax.nn.silu(gate) * up,
+                          p["w_down"][ee].astype(dt))
+
+    all_out = jnp.stack([one_expert(ee) for ee in range(cfg.num_experts)])  # (E,B,T,D)
+    y = jnp.zeros_like(x)
+    for kk in range(cfg.num_experts_per_tok):
+        sel_oh = jax.nn.one_hot(ids[..., kk], cfg.num_experts, dtype=dt)    # (B,T,E)
+        sel = jnp.einsum("ebtd,bte->btd", all_out, sel_oh)
+        y = y + gates[..., kk, None].astype(dt) * sel
+    if cfg.moe_dense_residual:
+        y = y + apply_mlp(cfg, p["dense"], x)
+    return y

@@ -1,0 +1,283 @@
+"""Mamba-2 mixer with the SSD (state-space duality) algorithm
+[arXiv:2405.21060], plus the O(1)-state decode step.
+
+The chunked SSD form: within a chunk the recurrence is computed as a masked
+(attention-like) matmul — MXU-shaped work; across chunks a linear recurrence
+carries the (heads, head_dim, state) tensor. This is what makes ``long_500k``
+decode trivially cheap for SSM archs (state is a few hundred KB).
+
+Layout conventions (n_groups = 1):
+  x   (B, T, H, P)   heads H = d_inner / head_dim, P = head_dim
+  dt  (B, T, H)      softplus-discretized step sizes
+  A   (H,)           negative decay rates (A = -exp(A_log))
+  B,C (B, T, N)      shared across heads (one group), N = ssm_state
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init, split_keys
+from repro.sharding.logical import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., L) per-step log-decays → (..., L, L) lower-triangular
+    segment sums S[i, j] = Σ_{k=j+1..i} a_k (i ≥ j), -inf above diagonal."""
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    l = a.shape[-1]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    return jnp.where(ii >= jj, diff, NEG_INF)
+
+
+def ssd_chunked(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b_mat: jax.Array,
+    c_mat: jax.Array,
+    *,
+    chunk: int,
+    initial_state: jax.Array | None = None,
+):
+    """Returns (y (B,T,H,P), final_state (B,H,P,N))."""
+    bsz, t, h, p = x.shape
+    n = b_mat.shape[-1]
+    if t % chunk:
+        raise ValueError(f"seq len {t} must be a multiple of ssm_chunk {chunk}")
+    c = t // chunk
+
+    # Chunk-index axis (c) carries the sequence sharding (context
+    # parallelism); the intra-chunk axis (l) stays local. Without these
+    # constraints the inter-chunk scan's unsharded zero-init carry pins the
+    # whole SSD body replicated over 'model' (same GSPMD scan pathology as
+    # flash attention — measured +45 GiB/device on hymba train_4k, §Perf).
+    xd = constrain((x * dt[..., None]).reshape(bsz, c, chunk, h, p),
+                   "batch", "seq", None, None, None)             # Δt·x
+    la = (dt * a[None, None, :]).reshape(bsz, c, chunk, h)       # per-step log decay
+    la = constrain(jnp.moveaxis(la, 3, 1), "batch", None, "seq", None)  # (B,H,C,L)
+    bm = constrain(b_mat.reshape(bsz, c, chunk, n), "batch", "seq", None, None)
+    cm = constrain(c_mat.reshape(bsz, c, chunk, n), "batch", "seq", None, None)
+
+    la_cs = jnp.cumsum(la, axis=-1)                              # (B,H,C,L)
+
+    # 1. Intra-chunk ("diagonal") output: masked attention-like matmul.
+    decay_mat = jnp.exp(_segsum(la))                             # (B,H,C,L,L)
+    y_diag = jnp.einsum(
+        "bcln,bcsn,bhcls,bcshp->bclhp", cm, bm, decay_mat, xd,
+        preferred_element_type=jnp.float32,
+    )
+
+    # 2. Per-chunk final states.
+    decay_states = jnp.exp(la_cs[..., -1:] - la_cs)              # (B,H,C,L)
+    states = jnp.einsum(
+        "bcln,bhcl,bclhp->bchpn", bm, decay_states, xd,
+        preferred_element_type=jnp.float32,
+    )
+
+    # 3. Inter-chunk linear recurrence (scan over chunks). The carry is a
+    # single (B,H,P,N) state — batch-sharded; the scan consumes the
+    # seq-sharded per-chunk states (XLA gathers them, ~MBs).
+    chunk_decay = jnp.exp(la_cs[..., -1])                        # (B,H,C)
+    s0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+    s0 = constrain(s0, "batch", None, None, None)
+
+    def body(carry, xs):
+        st, dec = xs                                             # (B,H,P,N), (B,H)
+        prev = carry
+        new = prev * dec[..., None, None] + st
+        return new, prev                                         # emit state ENTERING the chunk
+
+    sc = jnp.moveaxis(states, 1, 0)                              # (C,B,H,P,N)
+    dc = jnp.moveaxis(chunk_decay, 2, 0)                         # (C,B,H)
+    final_state, prev_states = jax.lax.scan(body, s0, (sc, dc))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                # (B,C,H,P,N)
+
+    # 4. State → output within each chunk.
+    state_decay_out = jnp.exp(la_cs)                             # (B,H,C,L)
+    y_off = jnp.einsum(
+        "bcln,bchpn,bhcl->bclhp", cm, prev_states, state_decay_out,
+        preferred_element_type=jnp.float32,
+    )
+
+    y = constrain(y_diag + y_off, "batch", "seq", None, None, None)
+    y = y.reshape(bsz, t, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_reference(x, dt, a, b_mat, c_mat, *, initial_state=None):
+    """Naive step-by-step recurrence (oracle for tests)."""
+    bsz, t, h, p = x.shape
+    n = b_mat.shape[-1]
+    s = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((bsz, h, p, n), jnp.float32)
+    )
+    ys = []
+    for i in range(t):
+        dec = jnp.exp(dt[:, i, :] * a[None, :])                  # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", x[:, i] * dt[:, i, :, None], b_mat[:, i])
+        s = s * dec[..., None, None] + upd
+        ys.append(jnp.einsum("bhpn,bn->bhp", s, c_mat[:, i]))
+    return jnp.stack(ys, axis=1).astype(x.dtype), s
+
+
+def ssd_decode_step(state, x1, dt1, a, b1, c1):
+    """One-token recurrent update. state (B,H,P,N); x1 (B,H,P); dt1 (B,H);
+    b1/c1 (B,N) → (y (B,H,P), new_state)."""
+    dec = jnp.exp(dt1 * a[None, :])
+    upd = jnp.einsum("bhp,bn->bhpn", x1 * dt1[..., None], b1)
+    new_state = state * dec[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c1)
+    return y.astype(x1.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 mixer block
+# ---------------------------------------------------------------------------
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_d_inner
+    h = cfg.ssm_heads
+    n = cfg.ssm_state
+    conv_ch = d_in + 2 * n  # conv runs over [x, B, C] jointly
+    return d_in, h, n, conv_ch
+
+
+def init_mamba(cfg, key) -> Params:
+    dt_ = jnp.dtype(cfg.param_dtype)
+    d, (d_in, h, n, conv_ch) = cfg.d_model, _dims(cfg)
+    ks = split_keys(key, ["in_proj", "conv_w", "A_log", "out_proj", "dt_bias"])
+    return {
+        "in_proj": dense_init(ks["in_proj"], (d, 2 * d_in + 2 * n + h), 0, dt_),
+        "conv_w": 0.1 * jax.random.normal(ks["conv_w"], (cfg.ssm_conv, conv_ch), jnp.float32).astype(dt_),
+        "conv_b": jnp.zeros((conv_ch,), dt_),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ),  # A = -exp(A_log) ∈ [-16, -1]
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01, jnp.float32))),
+        "gate_norm": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks["out_proj"], (d_in, d), 0, dt_),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. xbc (B,T,CH); w (K,CH)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(k):  # K=4: static unroll of shifted adds (cheap, fusable)
+        out = out + pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _split_in(cfg, proj):
+    d_in, h, n, _ = _dims(cfg)
+    z, xc, bm, cm, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1
+    )
+    return z, xc, bm, cm, dt
+
+
+def apply_mamba(cfg, p: Params, u: jax.Array, *, initial_state=None, return_state=False):
+    """u: (B, T, d_model) → (B, T, d_model) [, final ssd state]."""
+    bsz, t, _ = u.shape
+    d_in, h, n, conv_ch = _dims(cfg)
+    proj = jnp.einsum("btd,de->bte", u, p["in_proj"].astype(u.dtype))
+    z, xc, bm, cm, dt_raw = _split_in(cfg, proj)
+
+    xbc = _causal_conv(
+        jnp.concatenate([xc, bm, cm], axis=-1), p["conv_w"].astype(u.dtype),
+        p["conv_b"].astype(u.dtype),
+    )
+    xbc = jax.nn.silu(xbc)
+    xc, bm, cm = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+
+    x = xc.reshape(bsz, t, h, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+
+    # Pad the sequence to a chunk multiple. Padded steps carry dt = 0
+    # (decay exp(0·A) = 1, update 0·x·B = 0) so the final state is exact.
+    chunk = min(cfg.ssm_chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0)))
+    y, final_state = ssd_chunked(
+        x, dt, a, bm.astype(jnp.float32), cm.astype(jnp.float32),
+        chunk=chunk, initial_state=initial_state,
+    )
+    if pad:
+        y = y[:, :t]
+        x = x[:, :t]
+    y = y + x * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, t, d_in)
+
+    # Gated RMSNorm (mamba2's norm-before-out_proj).
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-5)
+         * p["gate_norm"]).astype(u.dtype)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(u.dtype))
+    if return_state:
+        return out, final_state
+    return out
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> dict:
+    d_in, h, n, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "ssd": jnp.zeros((batch, h, cfg.ssm_head_dim, n), jnp.float32),
+    }
+
+
+def apply_mamba_decode(cfg, p: Params, u1: jax.Array, cache: dict):
+    """One-token decode. u1: (B, 1, d_model) → (B, 1, d_model), new cache."""
+    bsz = u1.shape[0]
+    d_in, h, n, conv_ch = _dims(cfg)
+    proj = jnp.einsum("btd,de->bte", u1, p["in_proj"].astype(u1.dtype))
+    z, xc, bm, cm, dt_raw = _split_in(cfg, proj)
+    xbc_t = jnp.concatenate([xc, bm, cm], axis=-1)[:, 0]        # (B, CH)
+
+    # Rolling conv window: [cache (K-1), current] → conv output at t.
+    win = jnp.concatenate([cache["conv"], xbc_t[:, None, :]], axis=1)  # (B,K,CH)
+    w = p["conv_w"].astype(u1.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", win, w) + p["conv_b"].astype(u1.dtype)
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = win[:, 1:, :]
+
+    xc1, bm1, cm1 = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+    x1 = xc1.reshape(bsz, h, cfg.ssm_head_dim)
+    dt1 = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    y1, new_ssd = ssd_decode_step(cache["ssd"], x1, dt1, a,
+                                  bm1.astype(jnp.float32), cm1.astype(jnp.float32))
+    y1 = y1 + x1 * p["D"][None, :, None].astype(x1.dtype)
+    y1 = y1.reshape(bsz, 1, d_in)
+    y1 = y1 * jax.nn.silu(z)
+    yf = y1.astype(jnp.float32)
+    y1 = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-5)
+          * p["gate_norm"]).astype(u1.dtype)
+    out = jnp.einsum("bte,ed->btd", y1, p["out_proj"].astype(u1.dtype))
+    return out, {"conv": new_conv, "ssd": new_ssd}

@@ -1,0 +1,81 @@
+"""Serving engine: batched prefill + decode with per-sequence state.
+
+A deliberately small but real engine: continuous batch of ``max_batch``
+slots, greedy or temperature sampling, per-slot positions, EOS handling.
+Decode uses the model's cache API (full / ring / SSM states) — the same
+code path the dry-run lowers at (B=128, KV=32k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0       # 0 = greedy
+    eos_id: int | None = None
+    s_cache: int = 256
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, cfg, params, scfg: ServeConfig = ServeConfig()):
+        self.cfg = cfg
+        self.api = build_model(cfg)
+        self.params = params
+        self.scfg = scfg
+        self._prefill = jax.jit(
+            lambda p, b: self.api.prefill(p, b, s_cache=scfg.s_cache))
+        self._step = jax.jit(self.api.decode_step)
+
+    def generate(self, prompts: np.ndarray) -> np.ndarray:
+        """prompts: (B, T) int32 → (B, T + max_new) generated ids."""
+        scfg = self.scfg
+        b, t = prompts.shape
+        if t + scfg.max_new_tokens > scfg.s_cache:
+            raise ValueError(
+                f"prompt {t} + {scfg.max_new_tokens} new > cache {scfg.s_cache}")
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        logits, caches = self._prefill(self.params, batch)
+
+        key = jax.random.key(scfg.seed)
+        out = [jnp.asarray(prompts, jnp.int32)]
+        done = jnp.zeros((b,), bool)
+        token = self._sample(logits, key)
+        pos = jnp.full((b,), t, jnp.int32)
+        for i in range(scfg.max_new_tokens):
+            out.append(token)
+            if scfg.eos_id is not None:
+                done = done | (token[:, 0] == scfg.eos_id)
+                if bool(done.all()):
+                    pad = jnp.full((b, scfg.max_new_tokens - i - 1),
+                                   scfg.eos_id, jnp.int32)
+                    out.append(pad)
+                    break
+            logits, caches = self._step(self.params, caches, token, pos)
+            key, sub = jax.random.split(key)
+            token = self._sample(logits, sub)
+            pos = pos + 1
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        scaled = logits.astype(jnp.float32) / self.scfg.temperature
+        return jax.random.categorical(key, scaled, axis=-1)[:, None].astype(jnp.int32)
+
+
+def perplexity(cfg, params, tokens: np.ndarray) -> float:
+    """Convenience eval: exp(mean NLL) over a token batch."""
+    api = build_model(cfg)
+    loss, metrics = jax.jit(api.loss)(params, {"tokens": jnp.asarray(tokens)})
+    return float(jnp.exp(metrics["nll"]))

@@ -1,0 +1,25 @@
+from repro.sharding.partition import (
+    batch_axes,
+    batch_size_divisor,
+    batch_specs,
+    cache_specs,
+    decode_token_specs,
+    logits_spec,
+    named,
+    optimizer_state_specs,
+    param_specs,
+    spec_for_path,
+)
+
+__all__ = [
+    "batch_axes",
+    "batch_size_divisor",
+    "batch_specs",
+    "cache_specs",
+    "decode_token_specs",
+    "logits_spec",
+    "named",
+    "optimizer_state_specs",
+    "param_specs",
+    "spec_for_path",
+]

@@ -1,0 +1,91 @@
+"""Logical-axis sharding constraints inside model code.
+
+GSPMD propagation fails at scan boundaries: an unsharded carry init
+(jnp.zeros) pins the whole loop body replicated — measured +39 GiB/device on
+arctic train_4k when the flash-attention carry lost the sequence sharding.
+The production remedy (MaxText-style) is explicit logical annotations at the
+few propagation choke points.
+
+Model code calls ``constrain(x, "batch", "seq", None)`` with LOGICAL axis
+names; the launcher activates a mapping to physical mesh axes for the
+duration of tracing:
+
+    with mesh, logical_axis_rules(mesh, default_rules(mesh)):
+        jax.jit(step, ...).lower(*args)
+
+Outside such a context (CPU tests, examples) ``constrain`` is a no-op, so
+the model stays mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_tls = threading.local()
+
+__all__ = ["logical_axis_rules", "constrain", "default_rules"]
+
+
+def default_rules(mesh: Mesh) -> dict:
+    batch = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return {
+        "batch": batch,
+        "seq": "model",       # context parallelism: Q-sequence over model
+        "heads": None,        # heads_tp layout flips seq→None, heads→model
+        "kv_seq": "model",    # decode KV cache sequence (flash-decoding)
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",   # expert-parallel MoE buffers
+        "tokens": batch + ("model",),  # flattened B·T token dim (MoE dispatch)
+        "fsdp": "data",
+    }
+
+
+@contextlib.contextmanager
+def logical_axis_rules(mesh: Mesh, rules: dict | None = None):
+    prev = getattr(_tls, "ctx", None)
+    _tls.ctx = (mesh, rules or default_rules(mesh))
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def active() -> bool:
+    return getattr(_tls, "ctx", None) is not None
+
+
+def _axis_size(mesh: Mesh, phys) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, (tuple, list)):
+        n = 1
+        for a in phys:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[phys]
+
+
+def constrain(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (None = unsharded
+    dim). No-op outside a ``logical_axis_rules`` context. Dims that do not
+    divide evenly by their mapped mesh axes are silently left unsharded
+    (e.g. batch=1 in long_500k, token dims at small decode batches)."""
+    ctx = getattr(_tls, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(axes) != x.ndim:
+        raise ValueError(f"constrain: {len(axes)} axes for ndim {x.ndim}")
+    entries = []
+    for dim, a in enumerate(axes):
+        phys = rules.get(a) if a is not None else None
+        if phys is not None and x.shape[dim] % _axis_size(mesh, phys) != 0:
+            phys = None
+        entries.append(phys)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

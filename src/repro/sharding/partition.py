@@ -1,0 +1,210 @@
+"""Sharding rules: param-path → PartitionSpec, plus batch/cache specs.
+
+Strategy (DESIGN.md §5) on the production mesh (pod?, data, model):
+
+  * batch        → ('pod', 'data')              (all cells except long_500k)
+  * Q sequence   → 'model'                      (context parallelism: tokens
+                                                 arrive seq-sharded; K/V are
+                                                 all-gathered inside layers by
+                                                 GSPMD — head-count agnostic)
+  * d_ff         → 'model'                      (all archs divide by 16)
+  * vocab        → 'model'                      (padded to 128 multiples)
+  * experts      → 'model' (arctic)             (128/16 = 8 per device)
+  * FSDP (fsdp_params archs) → param d_model dims over 'data' (ZeRO-3-ish;
+    optimizer state inherits the same sharding = ZeRO-1 for free)
+  * decode KV cache sequence → 'model' (flash-decoding combine is the
+    softmax all-reduce GSPMD inserts); long_500k (batch=1) keeps batch
+    replicated and relies on the cache-sequence sharding alone.
+
+Rules are matched on path SUFFIXES of the param tree; group-stacked leaves
+(leading layer axis) are handled by left-padding specs with None.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import tree_paths
+
+FSDP_AXIS = "data"
+MODEL_AXIS = "model"
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_size_divisor(mesh: Mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+# (regex on path suffix) → spec tail builder(cfg) — tails align to the LAST
+# dims of the leaf; leading dims (e.g. the stacked layer axis) pad with None.
+def _rules(cfg):
+    fsdp = FSDP_AXIS if cfg.fsdp_params else None
+    rep = cfg.replicate_params
+    rules: list[tuple[str, tuple]] = [
+        (r"embeddings/embed$", (MODEL_AXIS, fsdp)),          # (V, D)
+        (r"embeddings/unembed$", (fsdp, MODEL_AXIS)),        # (D, V)
+        (r"(^|/)meta$", (None, None)),
+        # attention projections (wq/wk/wv: (D, H, Dh); wo: (H, Dh, D))
+        (r"attn/w[qkv]$", (fsdp, None, None)),
+        (r"attn/wo$", (None, None, fsdp)),
+        # dense MLP
+        (r"w_gate$|w_up$|w_in$", (fsdp, None if rep else MODEL_AXIS)),
+        (r"w_down$|w_out$", (None if rep else MODEL_AXIS, fsdp)),
+        # MoE experts (E, D, F) / (E, F, D); router stays replicated
+        (r"moe/router$", (None, None)),
+        # mamba: projections FSDP-shard their d_model-sized dim when the
+        # arch is fsdp_params (hymba); everything else replicated.
+        (r"mamba/(in_proj|out_proj)$", (fsdp, None)),
+        (r"mamba/", ()),
+        (r"conv_w$|conv_b$|A_log$|dt_bias$|gate_norm$", ()),
+    ]
+    if cfg.num_experts:
+        if cfg.shard_experts:   # arctic: experts over model, d_model over data
+            rules[5:5] = [
+                (r"moe/w_gate$|moe/w_up$", (MODEL_AXIS, fsdp, None)),
+                (r"moe/w_down$", (MODEL_AXIS, None, fsdp)),
+            ]
+        else:                   # mixtral: TP'd experts (d_ff over model)
+            rules[5:5] = [
+                (r"moe/w_gate$|moe/w_up$", (None, fsdp, MODEL_AXIS)),
+                (r"moe/w_down$", (None, MODEL_AXIS, fsdp)),
+            ]
+    return rules
+
+
+def spec_for_path(cfg, path: str, ndim: int) -> P:
+    for pat, tail in _rules(cfg):
+        if re.search(pat, path):
+            tail = tuple(tail)[:ndim]
+            pad = (None,) * (ndim - len(tail))
+            return P(*(pad + tail))
+    return P(*((None,) * ndim))  # replicated (norms, scalars, biases)
+
+
+def param_specs(cfg, params_tree) -> Any:
+    """Tree of PartitionSpec matching ``params_tree`` (arrays or
+    ShapeDtypeStructs)."""
+    flat = dict(tree_paths(params_tree))
+
+    def walk(sub, prefix=""):
+        out = {}
+        for k, v in sub.items():
+            path = f"{prefix}/{k}" if prefix else k
+            if isinstance(v, dict):
+                out[k] = walk(v, path)
+            else:
+                out[k] = spec_for_path(cfg, path, len(v.shape))
+        return out
+
+    return walk(params_tree)
+
+
+def named(mesh: Mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache / output specs per shape cell
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg, mesh: Mesh, *, seq_shard: bool = True) -> dict:
+    """Specs for a train/prefill batch dict."""
+    ba = batch_axes(mesh)
+    seq = MODEL_AXIS if seq_shard else None
+    specs = {"tokens": P(ba, seq)}
+    if cfg.embeds_input and not cfg.is_encoder_decoder:
+        specs["embeds"] = P(ba, seq, None)
+    if cfg.is_encoder_decoder:
+        specs["enc_embeds"] = P(ba, seq, None)
+    return specs
+
+
+def decode_token_specs(cfg, mesh: Mesh, batch_sharded: bool) -> tuple:
+    ba = batch_axes(mesh) if batch_sharded else None
+    return P(ba, None), P(ba)  # token (B,1), pos (B,)
+
+
+def cache_specs(cfg, mesh: Mesh, caches_tree, *, batch_sharded: bool) -> Any:
+    """Specs for decode caches: KV sequence over 'model' (context layout) or
+    KV heads over 'model' (heads_tp layout), batch over ('pod','data') when
+    divisible (else replicated, long_500k)."""
+    ba = batch_axes(mesh) if batch_sharded else None
+    heads_tp = cfg.attn_layout == "heads_tp"
+    s_ax = None if heads_tp else MODEL_AXIS
+    h_ax = MODEL_AXIS if heads_tp else None
+
+    def leaf_spec(path: str, ndim: int) -> P:
+        if re.search(r"(^|/)(k|v)$", path):        # (C, B, S, KV, Dh)
+            return P(None, ba, s_ax, h_ax, None)
+        if re.search(r"(^|/)(k|v)_scale$", path):  # (C, B, S, KV)
+            return P(None, ba, s_ax, h_ax)
+        if re.search(r"(^|/)(ck|cv)$", path):      # (L, B, T_enc, KV, Dh)
+            return P(None, ba, s_ax, h_ax, None)
+        if re.search(r"(^|/)pos$", path):          # (C, B, S)
+            return P(None, ba, s_ax)
+        if re.search(r"(^|/)mpos$", path):         # (B, T_enc)
+            return P(ba, MODEL_AXIS)
+        if re.search(r"(^|/)conv$", path):         # (C, B, K-1, CH)
+            return P(None, ba, None, None)
+        if re.search(r"(^|/)ssd$", path):          # (C, B, H, P, N)
+            return P(None, ba, None, None, None)
+        return P(*((None,) * ndim))
+
+    def walk(node, prefix=""):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, f"{prefix}/{i}") for i, v in enumerate(node))
+        return leaf_spec(prefix, len(node.shape))
+
+    return walk(caches_tree)
+
+
+def logits_spec(cfg, mesh: Mesh, batch_sharded: bool = True) -> P:
+    ba = batch_axes(mesh) if batch_sharded else None
+    return P(ba, MODEL_AXIS)  # (B, padded_vocab): vocab TP'd
+
+
+def optimizer_state_specs(param_spec_tree, opt_state_tree) -> Any:
+    """Opt-state specs derived from param specs: moments inherit the param
+    spec; adafactor factored stats drop the reduced dim's entry."""
+
+    def walk(spec, st):
+        if isinstance(st, dict) and set(st) == {"vr", "vc"}:
+            s = tuple(spec)
+            return {"vr": P(*s[:-1]), "vc": P(*(s[:-2] + s[-1:]))}
+        if isinstance(st, dict) and set(st) == {"v"}:
+            return {"v": spec}
+        return spec
+
+    def rec(spec_node, st_node):
+        if isinstance(st_node, dict):
+            if set(st_node) <= {"vr", "vc", "v"}:
+                return walk(spec_node, st_node)
+            return {k: rec(spec_node[k] if isinstance(spec_node, dict) else spec_node,
+                           v) for k, v in st_node.items()}
+        return spec_node
+
+    out = {"step": P()}
+    for key in opt_state_tree:
+        if key == "step":
+            continue
+        out[key] = rec(param_spec_tree, opt_state_tree[key])
+    return out

@@ -1,0 +1,67 @@
+"""Gradient compression for the cross-pod axis: int8 quantization with
+error feedback (1-bit-Adam-style residual correction).
+
+On a multi-pod mesh the 'pod' axis crosses data-center interconnect (DCI),
+~10× slower than ICI; compressing the gradient all-reduce on that axis
+cuts the pod-sync bytes 4× (bf16→int8 + per-leaf scales). Error feedback
+keeps the quantization noise unbiased over steps: the residual (g - Q(g))
+is added to the NEXT step's gradient before quantizing, so the series of
+applied updates telescopes to the true gradient sum.
+
+Usage inside a train step (opt-in):
+
+    comp = ErrorFeedbackCompressor.init(params)
+    grads_q, comp = compress_grads(grads, comp)     # quantize + residual
+    # ... psum(grads_q) over 'pod' (cheap), then dequantize ...
+
+Here we expose the compressor as pure functions over pytrees so it composes
+with any collective pattern; the roundtrip identity and error-feedback
+telescoping are property-tested.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_state", "compress", "decompress", "compress_grads"]
+
+
+def init_state(params: Any) -> Any:
+    """Per-leaf fp32 error-feedback residuals (zeros)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant_leaf(g: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def compress(tree: Any):
+    """pytree of fp arrays → (int8 tree, scale tree)."""
+    leaves, tdef = jax.tree.flatten(tree)
+    qs, scales = zip(*(_quant_leaf(x.astype(jnp.float32)) for x in leaves))
+    return tdef.unflatten(list(qs)), tdef.unflatten(list(scales))
+
+
+def decompress(q_tree: Any, scale_tree: Any, dtype=jnp.float32) -> Any:
+    return jax.tree.map(
+        lambda q, s: (q.astype(jnp.float32) * s).astype(dtype), q_tree, scale_tree)
+
+
+def compress_grads(grads: Any, residual: Any):
+    """Error-feedback compression step.
+
+    Returns (int8 grads, scales, new_residual) where
+    decompress(int8, scales) + new_residual == grads + residual (exactly,
+    up to fp32 rounding) — the telescoping invariant.
+    """
+    corrected = jax.tree.map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    q, scales = compress(corrected)
+    recon = decompress(q, scales)
+    new_residual = jax.tree.map(lambda c, d: c - d, corrected, recon)
+    return q, scales, new_residual

@@ -1,0 +1,136 @@
+"""The training loop: sharded step, grad accumulation, checkpoint/restart,
+straggler watchdog, graceful preemption. This is the real driver the
+examples and launch/train.py use (CPU-scale here, mesh-scale on pods).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokens import SyntheticTokens
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.sharding import named, param_specs
+from repro.train import checkpoint as ckpt
+from repro.train.fault_tolerance import GracefulShutdown, StepWatchdog
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 200
+    log_every: int = 10
+    ckpt_every: int = 100
+    ckpt_dir: str | None = None
+    grad_accum: int = 1
+    seed: int = 0
+    seq_len: int = 64
+    global_batch: int = 16
+
+
+def make_accum_train_step(cfg, accum: int, total_steps: int = 100_000):
+    """Gradient accumulation: scan over ``accum`` microbatches, average
+    grads, then apply one optimizer update (same API as make_train_step;
+    batch leading dim must be accum × microbatch)."""
+    from repro.train.optimizer import make_optimizer
+
+    api = build_model(cfg)
+    ocfg, oinit, oupdate = make_optimizer(cfg.optimizer, total_steps=total_steps)
+
+    def train_step(params, opt_state, batch):
+        def micro(b):
+            def loss_fn(p):
+                return api.loss(p, b)
+            (loss, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            return loss, m, g
+
+        def body(carry, b):
+            gsum, lsum = carry
+            loss, _, g = micro(b)
+            return (jax.tree.map(jnp.add, gsum, g), lsum + loss), None
+
+        micro_batches = jax.tree.map(
+            lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+            batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = jax.lax.scan(body, (zeros, jnp.zeros(())), micro_batches)
+        grads = jax.tree.map(lambda g: g / accum, gsum)
+        new_p, new_s, om = oupdate(ocfg, grads, opt_state, params)
+        return new_p, new_s, {"loss": lsum / accum, **om}
+
+    return train_step, oinit
+
+
+def train(cfg, loop: TrainLoopConfig, *, mesh=None,
+          log_fn: Callable[[int, dict], None] | None = None) -> dict:
+    """Run the loop; returns final metrics + history. Works on 1 CPU device
+    (examples) or a mesh (launch/train.py passes one)."""
+    api = build_model(cfg)
+
+    # LR schedule scaled to THIS run's length (warmup = ~total/10).
+    if loop.grad_accum > 1:
+        step_fn, oinit = make_accum_train_step(cfg, loop.grad_accum,
+                                               total_steps=loop.total_steps)
+    else:
+        step_fn, oinit = make_train_step(cfg, total_steps=loop.total_steps)
+
+    pspecs = param_specs(cfg, jax.eval_shape(lambda: api.init(jax.random.key(0))))
+    shardings = named(mesh, pspecs) if mesh is not None else None
+
+    def init_state():
+        params = api.init(jax.random.key(loop.seed))
+        return {"params": params, "opt": oinit(params)}
+
+    start_step = 0
+    state = None
+    if loop.ckpt_dir:
+        last = ckpt.latest_step(loop.ckpt_dir)
+        if last is not None:
+            start_step, state = ckpt.restore(loop.ckpt_dir, last)
+            start_step += 1
+            print(f"[train] resumed from step {last}")
+    if state is None:
+        state = init_state()
+
+    ds = SyntheticTokens(cfg.vocab_size, seq_len=loop.seq_len,
+                         global_batch=loop.global_batch, seed=loop.seed)
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    watchdog = StepWatchdog()
+    shutdown = GracefulShutdown().install()
+    writer = ckpt.AsyncCheckpointer(loop.ckpt_dir) if loop.ckpt_dir else None
+
+    history = []
+    params, opt = state["params"], state["opt"]
+    for step in range(start_step, loop.total_steps):
+        batch = jax.tree.map(jnp.asarray, ds.batch_at(step))
+        watchdog.start()
+        params, opt, metrics = jitted(params, opt, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = watchdog.stop(step)
+        metrics["step_time_s"] = dt
+        if step % loop.log_every == 0 or step == loop.total_steps - 1:
+            history.append({"step": step, **metrics})
+            if log_fn:
+                log_fn(step, metrics)
+            else:
+                print(f"[train] step {step:5d} loss {metrics['loss']:.4f} "
+                      f"({dt*1e3:.0f}ms)")
+        if writer and (step % loop.ckpt_every == 0 and step > 0):
+            writer.save(step, {"params": params, "opt": opt})
+        if shutdown.requested:
+            print(f"[train] preemption at step {step}: checkpointing + exit")
+            if loop.ckpt_dir:
+                ckpt.save(loop.ckpt_dir, step, {"params": params, "opt": opt})
+            break
+    if writer:
+        writer.wait()
+    shutdown.uninstall()
+    return {"history": history, "params": params, "opt": opt,
+            "stragglers": watchdog.stragglers}

@@ -1,0 +1,43 @@
+import os
+
+# Keep the default test environment at ONE device — multi-device tests spawn
+# subprocesses with their own XLA_FLAGS (see tests/test_distributed_glcm.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+def brute_force_glcm(img: np.ndarray, levels: int, d: int, theta: int) -> np.ndarray:
+    """The obviously-correct O(N²) double loop (paper Eq. (1)–(3))."""
+    offs = {0: (0, 1), 45: (1, -1), 90: (1, 0), 135: (1, 1)}
+    dy, dx = offs[theta]
+    dy, dx = dy * d, dx * d
+    h, w = img.shape
+    out = np.zeros((levels, levels), np.int64)
+    for y in range(h):
+        for x in range(w):
+            yy, xx = y + dy, x + dx
+            if 0 <= yy < h and 0 <= xx < w:
+                out[img[yy, xx], img[y, x]] += 1
+    return out
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def smooth_image(rng):
+    """Fig 1(a) analogue: slowly-varying gray levels (heavy vote conflicts)."""
+    base = np.cumsum(rng.normal(size=(64, 64)), axis=1)
+    base = base + np.cumsum(rng.normal(size=(64, 64)), axis=0)
+    lo, hi = base.min(), base.max()
+    return ((base - lo) / (hi - lo) * 255).astype(np.uint8)
+
+
+@pytest.fixture
+def random_image(rng):
+    """Fig 1(b) analogue: drastic gray-level changes (scattered votes)."""
+    return rng.integers(0, 256, size=(64, 64)).astype(np.uint8)

@@ -1,0 +1,106 @@
+"""Attention unit tests: chunked online-softmax == direct softmax, GQA ==
+explicitly repeated MHA, SWA masking, RoPE properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import sdpa_chunked, sdpa_direct
+from repro.models.layers import apply_rope, sinusoidal_positions
+
+
+def _qkv(rng, b=2, t=16, s=16, h=4, kv=2, d=8):
+    q = jnp.asarray(rng.normal(size=(b, t, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, d)), jnp.float32)
+    qp = jnp.broadcast_to(jnp.arange(t), (b, t))
+    kp = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return q, k, v, qp, kp
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 64])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_matches_direct(rng, chunk, causal):
+    q, k, v, qp, kp = _qkv(rng, t=32, s=32)
+    want = sdpa_direct(q, k, v, qp, kp, causal=causal)
+    got = sdpa_chunked(q, k, v, qp, kp, causal=causal, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("window", [1, 4, 8])
+def test_sliding_window(rng, window):
+    q, k, v, qp, kp = _qkv(rng, t=24, s=24)
+    got = sdpa_direct(q, k, v, qp, kp, causal=True, window=window)
+    # Brute-force reference with an explicit window mask.
+    mask = (np.arange(24)[None, :, None] >= np.arange(24)[None, None, :]) & (
+        np.arange(24)[None, :, None] - np.arange(24)[None, None, :] < window
+    )
+    def ref():
+        qg = np.asarray(q).reshape(2, 24, 2, 2, 8)
+        s = np.einsum("btkgd,bskd->bkgts", qg, np.asarray(k)) / np.sqrt(8)
+        s = np.where(mask[:, None, None, :, :], s, -1e30)
+        e = np.exp(s - s.max(-1, keepdims=True))
+        w = e / e.sum(-1, keepdims=True)
+        y = np.einsum("bkgts,bskd->btkgd", w, np.asarray(v))
+        return y.reshape(2, 24, 4, 8)
+    np.testing.assert_allclose(np.asarray(got), ref(), rtol=1e-4, atol=1e-5)
+    # chunked agrees too
+    got_c = sdpa_chunked(q, k, v, qp, kp, causal=True, window=window, chunk=8)
+    np.testing.assert_allclose(np.asarray(got_c), ref(), rtol=1e-4, atol=1e-5)
+
+
+def test_gqa_equals_repeated_mha(rng):
+    """GQA grouping must equal MHA with kv heads explicitly repeated."""
+    b, t, h, kv, d = 2, 8, 6, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, t, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, t, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, t, kv, d)), jnp.float32)
+    qp = jnp.broadcast_to(jnp.arange(t), (b, t))
+    got = sdpa_direct(q, k, v, qp, qp, causal=True)
+    k_rep = jnp.repeat(k, h // kv, axis=2)
+    v_rep = jnp.repeat(v, h // kv, axis=2)
+    want = sdpa_direct(q, k_rep, v_rep, qp, qp, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_invalid_kpos_masked(rng):
+    """Slots with k_pos = -1 (unwritten cache) must get zero weight."""
+    q, k, v, qp, kp = _qkv(rng, t=4, s=8)
+    kp_partial = jnp.where(jnp.arange(8) < 5, kp, -1)
+    got = sdpa_direct(q, k, v, qp + 10, kp_partial, causal=True)
+    want = sdpa_direct(q, k[:, :5], v[:, :5], qp + 10, kp[:, :5], causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_rope_relative_property(rng):
+    """RoPE inner products depend only on relative positions."""
+    d = 16
+    x = jnp.asarray(rng.normal(size=(1, 1, 1, d)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(1, 1, 1, d)), jnp.float32)
+
+    def dot_at(p1, p2):
+        xr = apply_rope(x, jnp.array([[p1]]), 10000.0)
+        yr = apply_rope(y, jnp.array([[p2]]), 10000.0)
+        return float(jnp.sum(xr * yr))
+
+    np.testing.assert_allclose(dot_at(3, 7), dot_at(13, 17), rtol=1e-4)
+    np.testing.assert_allclose(dot_at(0, 5), dot_at(100, 105), rtol=1e-4)
+    assert not np.allclose(dot_at(0, 5), dot_at(0, 6), rtol=1e-3)
+
+
+def test_rope_norm_preserved(rng):
+    x = jnp.asarray(rng.normal(size=(2, 6, 4, 16)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(6), (2, 6))
+    xr = apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(xr), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+
+
+def test_sinusoidal_shapes():
+    pos = jnp.arange(10)[None, :]
+    e = sinusoidal_positions(pos, 64)
+    assert e.shape == (1, 10, 64)
+    assert bool(jnp.isfinite(e).all())
+    assert float(jnp.abs(e).max()) <= 1.0 + 1e-6

@@ -1,0 +1,95 @@
+"""Gradient compression (error feedback) + the §II.A conflict analyzer."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.conflicts import analyze_image, expected_collision_rate
+from repro.data.images import random_texture, smooth_texture
+from repro.train.compression import (
+    compress,
+    compress_grads,
+    decompress,
+    init_state,
+)
+
+
+def _tree(rng):
+    return {"a": jnp.asarray(rng.normal(size=(16, 8)), jnp.float32) * 3,
+            "b": jnp.asarray(rng.normal(size=(5,)), jnp.float32) * 0.01}
+
+
+def test_compress_roundtrip_error_bounded(rng):
+    t = _tree(rng)
+    q, s = compress(t)
+    back = decompress(q, s)
+    for x, y, sc in zip(jax.tree.leaves(t), jax.tree.leaves(back),
+                        jax.tree.leaves(s)):
+        assert y.dtype == jnp.float32
+        # |error| <= scale/2 per element (symmetric int8 rounding)
+        assert float(jnp.max(jnp.abs(x - y))) <= float(sc) * 0.5 + 1e-7
+    # int8 payload really is 4x smaller than f32
+    assert all(x.dtype == jnp.int8 for x in jax.tree.leaves(q))
+
+
+def test_error_feedback_telescopes(rng):
+    """Σ_k decompress(Q_k) == Σ_k g_k (up to one residual) — the invariant
+    that makes compressed all-reduce unbiased over time."""
+    grads = [_tree(np.random.default_rng(i)) for i in range(8)]
+    res = init_state(grads[0])
+    applied = jax.tree.map(jnp.zeros_like, grads[0])
+    for g in grads:
+        q, s, res = compress_grads(g, res)
+        applied = jax.tree.map(lambda a, d: a + d, applied, decompress(q, s))
+    true_sum = jax.tree.map(lambda *xs: sum(xs), *grads)
+    # applied + final residual == true sum (exactly, modulo fp32 rounding)
+    for a, r, t in zip(jax.tree.leaves(applied), jax.tree.leaves(res),
+                       jax.tree.leaves(true_sum)):
+        np.testing.assert_allclose(np.asarray(a + r), np.asarray(t),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.given(
+    g=hnp.arrays(np.float32, st.integers(1, 64),
+                 elements=st.floats(-100, 100, width=32)),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_compress_property(g):
+    q, s = compress({"g": jnp.asarray(g)})
+    back = np.asarray(decompress(q, s)["g"])
+    assert np.all(np.abs(back - g) <= float(jax.tree.leaves(s)[0]) * 0.5 + 1e-6)
+
+
+def test_conflict_analysis_separates_fig1_regimes():
+    """The paper's §II.A, quantified: the smooth image (Fig 1a) must show a
+    much higher collision rate than the random image (Fig 1b), and L=32
+    must collide less than L=8 (the paper's two observations)."""
+    smooth = jnp.asarray(smooth_texture(128), jnp.int32)
+    rand = jnp.asarray(random_texture(128), jnp.int32)
+
+    a8 = analyze_image(smooth // 32, 8)
+    b8 = analyze_image(rand // 32, 8)
+    a32 = analyze_image(smooth // 8, 32)
+    b32 = analyze_image(rand // 8, 32)
+
+    assert a8["collision_rate"] > 3 * b8["collision_rate"], (a8, b8)
+    assert b8["collision_rate"] > b32["collision_rate"], "higher L must scatter votes"
+    # random image ≈ uniform votes: collision close to 1/L²
+    assert b32["collision_rate"] < 3 * b32["uniform_baseline"]
+    # serialization factor ordering matches (the Table II prediction)
+    assert a8["serialization_factor"] > b32["serialization_factor"]
+
+
+def test_collision_rate_is_glcm_energy(rng):
+    img = jnp.asarray(rng.integers(0, 8, (32, 32)), jnp.int32)
+    from repro.core.haralick import haralick_features
+    from repro.core.schemes import glcm_onehot
+    from repro.core.conflicts import conflict_profile
+
+    p = conflict_profile(img, 8)
+    rate = float(expected_collision_rate(p))
+    energy = float(haralick_features(glcm_onehot(img, 8, 1, 0))[0])
+    np.testing.assert_allclose(rate, energy, rtol=1e-5)

@@ -1,0 +1,51 @@
+"""Distributed GLCM (shard_map + halo exchange + psum) — runs in a
+subprocess with 8 forced host devices so the default test env stays at 1."""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core.distributed import glcm_sharded, glcm_auto_sharded
+    from repro.core.schemes import glcm_scatter
+
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rng = np.random.default_rng(0)
+    img = jnp.asarray(rng.integers(0, 8, size=(64, 96)), jnp.int32)
+
+    for d, theta in [(1, 0), (1, 45), (4, 90), (2, 135)]:
+        want = np.asarray(glcm_scatter(img, 8, d, theta))
+        got = np.asarray(glcm_sharded(img, 8, d, theta, mesh, axis="data"))
+        np.testing.assert_array_equal(got, want), (d, theta)
+        got2 = np.asarray(glcm_sharded(img, 8, d, theta, mesh, axis=("data", "model")))
+        np.testing.assert_array_equal(got2, want), (d, theta, "2-axis")
+        got3 = np.asarray(glcm_auto_sharded(img, 8, d, theta, mesh, axis="data"))
+        np.testing.assert_array_equal(got3, want), (d, theta, "auto")
+    print("DISTRIBUTED-GLCM-OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_glcm_8_devices():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"},
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "DISTRIBUTED-GLCM-OK" in proc.stdout

@@ -1,0 +1,149 @@
+"""Pallas kernels vs the pure-jnp oracles (interpret mode on CPU): shape /
+dtype / parameter sweeps per the kernel-testing contract."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.glcm_kernel import glcm_fused_pallas, glcm_vote_pallas
+from repro.kernels.histogram_kernel import histogram_pallas
+
+from conftest import brute_force_glcm
+
+
+@pytest.mark.parametrize("levels", [8, 16, 32])
+@pytest.mark.parametrize("n", [1, 100, 2048, 5000])
+@pytest.mark.parametrize("copies", [1, 4])
+def test_vote_kernel_random_streams(rng, levels, n, copies):
+    a = rng.integers(0, levels, size=(n,)).astype(np.int32)
+    r = rng.integers(0, levels, size=(n,)).astype(np.int32)
+    got = glcm_vote_pallas(
+        jnp.asarray(a), jnp.asarray(r), levels=levels, copies=copies, interpret=True
+    )
+    want = np.zeros((levels, levels), np.int64)
+    np.add.at(want, (r, a), 1)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.int8, np.uint8, np.int64])
+def test_vote_kernel_dtypes(rng, dtype):
+    levels = 8
+    a = rng.integers(0, levels, size=(300,)).astype(dtype)
+    r = rng.integers(0, levels, size=(300,)).astype(dtype)
+    got = glcm_vote_pallas(jnp.asarray(a), jnp.asarray(r), levels=levels, interpret=True)
+    want = np.zeros((levels, levels), np.int64)
+    np.add.at(want, (r.astype(np.int64), a.astype(np.int64)), 1)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_vote_kernel_padding_is_dropped(rng):
+    """-1 sentinel entries must not vote."""
+    levels = 8
+    a = np.array([0, 1, -1, 2], np.int32)
+    r = np.array([3, -1, 4, 5], np.int32)
+    got = np.asarray(
+        glcm_vote_pallas(jnp.asarray(a), jnp.asarray(r), levels=levels, interpret=True)
+    )
+    want = np.zeros((levels, levels), np.int64)
+    want[3, 0] += 1  # only pairs with BOTH sides valid vote... (r=3,a=0)
+    want[5, 2] += 1
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("levels", [8, 32])
+@pytest.mark.parametrize("d,theta", [(1, 0), (1, 45), (4, 0), (4, 45), (2, 90), (3, 135)])
+def test_glcm_pallas_vs_brute_force(rng, levels, d, theta):
+    img = rng.integers(0, levels, size=(24, 40)).astype(np.int32)
+    got = np.asarray(kops.glcm_pallas(jnp.asarray(img), levels, d, theta, interpret=True))
+    want = brute_force_glcm(img, levels, d, theta)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (16, 128), (9, 130), (40, 256), (64, 64)])
+@pytest.mark.parametrize("levels", [8, 16])
+def test_fused_kernel_shapes(rng, shape, levels):
+    img = rng.integers(0, levels, size=shape).astype(np.int32)
+    pairs = ((1, 0), (1, 45), (1, 90), (1, 135))
+    got = np.asarray(kops.glcm_pallas_multi(jnp.asarray(img), levels, pairs, interpret=True))
+    for k, (d, t) in enumerate(pairs):
+        want = brute_force_glcm(img, levels, d, t)
+        np.testing.assert_array_equal(got[k], want, err_msg=f"offset {k}: d={d} θ={t}")
+
+
+@pytest.mark.parametrize("tile_h", [8, 16])
+@pytest.mark.parametrize("d", [1, 4, 8])
+def test_fused_kernel_halo_distances(rng, tile_h, d):
+    """dy up to tile_h must be handled by the next-tile halo Ref."""
+    levels = 8
+    img = rng.integers(0, levels, size=(48, 128)).astype(np.int32)
+    got = np.asarray(
+        glcm_fused_pallas(
+            jnp.asarray(img),
+            levels=levels,
+            offsets=((d, 0), (d, -d), (d, d)),  # 90°, 45°, 135° at distance d
+            tile_h=tile_h,
+            interpret=True,
+        )
+    )
+    for k, theta in enumerate((90, 45, 135)):
+        want = brute_force_glcm(img, levels, d, theta)
+        np.testing.assert_array_equal(got[k], want, err_msg=f"d={d} θ={theta}")
+
+
+@pytest.mark.parametrize("copies", [1, 2, 4])
+def test_fused_kernel_copies_invariant(rng, copies):
+    levels = 8
+    img = rng.integers(0, levels, size=(32, 128)).astype(np.int32)
+    base = glcm_fused_pallas(
+        jnp.asarray(img), levels=levels, offsets=((1, 1),), tile_h=8, copies=1,
+        interpret=True,
+    )
+    got = glcm_fused_pallas(
+        jnp.asarray(img), levels=levels, offsets=((1, 1),), tile_h=8, copies=copies,
+        interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+@pytest.mark.parametrize("levels", [8, 32, 128])
+@pytest.mark.parametrize("n", [1, 2048, 4097])
+def test_histogram_kernel(rng, levels, n):
+    v = rng.integers(0, levels, size=(n,)).astype(np.int32)
+    got = np.asarray(histogram_pallas(jnp.asarray(v), levels=levels, interpret=True))
+    want = np.bincount(v, minlength=levels)
+    np.testing.assert_array_equal(got, want)
+    assert got.sum() == n
+
+
+def test_histogram_matches_ref_oracle(rng):
+    levels = 32
+    v = rng.integers(0, levels, size=(1000,))
+    got = np.asarray(histogram_pallas(jnp.asarray(v), levels=levels, interpret=True))
+    want = np.asarray(kref.histogram_reference(jnp.asarray(v), levels))
+    np.testing.assert_array_equal(got, want.astype(np.int64))
+
+
+def test_onehot_count_matches_ref(rng):
+    idx = rng.integers(0, 16, size=(4, 7, 5))
+    w = rng.normal(size=(4, 7, 5)).astype(np.float32)
+    got = kops.onehot_count(jnp.asarray(idx), 16, jnp.asarray(w))
+    want = kref.onehot_count_reference(jnp.asarray(idx), 16, jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    got_u = kops.onehot_count(jnp.asarray(idx), 16)
+    want_u = kref.onehot_count_reference(jnp.asarray(idx), 16)
+    np.testing.assert_allclose(np.asarray(got_u), np.asarray(want_u))
+
+
+def test_vote_kernel_bad_args():
+    with pytest.raises(ValueError):
+        glcm_vote_pallas(
+            jnp.zeros((4,), jnp.int32), jnp.zeros((5,), jnp.int32), levels=8,
+            interpret=True,
+        )
+    with pytest.raises(ValueError):
+        glcm_vote_pallas(
+            jnp.zeros((4,), jnp.int32), jnp.zeros((4,), jnp.int32), levels=8,
+            chunk=100, copies=3, interpret=True,
+        )

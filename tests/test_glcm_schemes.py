@@ -1,0 +1,114 @@
+"""Schemes 1–3 (jnp) against the numpy brute-force oracle, plus scheme
+cross-agreement on the paper's parameter grid."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schemes
+from repro.core.quantize import quantize_uniform
+from repro.kernels import ref as kref
+
+from conftest import brute_force_glcm
+
+LEVELS = (8, 32)
+PAIRS = schemes.PAPER_PAIRS  # d ∈ {1,4} × θ ∈ {0°,45°}
+ALL_THETAS = (0, 45, 90, 135)
+
+
+def _quant(img, levels):
+    return np.asarray(quantize_uniform(jnp.asarray(img), levels, vmin=0, vmax=255))
+
+
+@pytest.mark.parametrize("levels", LEVELS)
+@pytest.mark.parametrize("d,theta", PAIRS)
+@pytest.mark.parametrize("image_fixture", ["smooth_image", "random_image"])
+def test_scatter_matches_brute_force(request, image_fixture, levels, d, theta):
+    img = _quant(request.getfixturevalue(image_fixture), levels)
+    want = brute_force_glcm(img, levels, d, theta)
+    got = np.asarray(schemes.glcm_scatter(jnp.asarray(img), levels, d, theta))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("theta", ALL_THETAS)
+@pytest.mark.parametrize("d", [1, 3])
+def test_onehot_matches_brute_force_all_directions(random_image, theta, d):
+    levels = 16
+    img = _quant(random_image, levels)
+    want = brute_force_glcm(img, levels, d, theta)
+    got = np.asarray(schemes.glcm_onehot(jnp.asarray(img), levels, d, theta))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("copies", [1, 2, 4, 8])
+def test_onehot_copies_invariant(random_image, copies):
+    """The paper's R (copy count) must not change the result — only the
+    execution schedule (Scheme 2's whole point)."""
+    levels = 32
+    img = jnp.asarray(_quant(random_image, levels))
+    base = schemes.glcm_onehot(img, levels, 1, 45, copies=1)
+    got = schemes.glcm_onehot(img, levels, 1, 45, copies=copies)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+@pytest.mark.parametrize("num_blocks", [1, 2, 4, 8])
+@pytest.mark.parametrize("d,theta", [(1, 0), (1, 45), (4, 90), (2, 135)])
+def test_blocked_matches_scatter(smooth_image, num_blocks, d, theta):
+    """Scheme 3 halo handling (paper Eq. (8)/(9)): boundary pairs counted
+    exactly once for every direction and block count."""
+    levels = 8
+    img = jnp.asarray(_quant(smooth_image, levels))
+    want = schemes.glcm_scatter(img, levels, d, theta)
+    got = schemes.glcm_blocked(img, levels, d, theta, num_blocks=num_blocks)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_multi_matches_single(random_image):
+    levels = 8
+    img = jnp.asarray(_quant(random_image, levels))
+    multi = schemes.glcm_multi(img, levels, PAIRS)
+    for k, (d, t) in enumerate(PAIRS):
+        single = schemes.glcm_onehot(img, levels, d, t)
+        np.testing.assert_array_equal(np.asarray(multi[k]), np.asarray(single))
+
+
+def test_nonsquare_and_odd_shapes(rng):
+    levels = 8
+    for shape in [(7, 13), (16, 5), (33, 129), (128, 16)]:
+        img = rng.integers(0, levels, size=shape).astype(np.int32)
+        for d, t in [(1, 0), (1, 135), (2, 45)]:
+            if d >= min(shape):
+                continue
+            want = brute_force_glcm(img, levels, d, t)
+            got = np.asarray(schemes.glcm_onehot(jnp.asarray(img), levels, d, t))
+            np.testing.assert_array_equal(got, want, err_msg=f"{shape} d={d} t={t}")
+
+
+def test_symmetric_and_normalized(random_image):
+    levels = 8
+    img = jnp.asarray(_quant(random_image, levels))
+    g = schemes.glcm_scatter(img, levels, 1, 0, symmetric=True)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g).T)
+    gn = schemes.glcm_scatter(img, levels, 1, 0, normalize=True)
+    np.testing.assert_allclose(np.asarray(gn).sum(), 1.0, rtol=1e-6)
+
+
+def test_pair_planes_shapes(random_image):
+    img = jnp.asarray(_quant(random_image, 8))
+    for d, t in [(1, 0), (4, 45), (2, 90), (3, 135)]:
+        a, r = kref.pair_planes(img, d, t)
+        assert a.shape == r.shape
+        dy, dx = kref.glcm_offsets(d, t)
+        assert a.shape == (img.shape[0] - dy, img.shape[1] - abs(dx))
+
+
+def test_bad_args():
+    img = jnp.zeros((8, 8), jnp.int32)
+    with pytest.raises(ValueError):
+        kref.glcm_offsets(0, 0)
+    with pytest.raises(ValueError):
+        kref.glcm_offsets(1, 30)
+    with pytest.raises(ValueError):
+        schemes.glcm_onehot(img, 8, 1, 0, copies=0)
+    with pytest.raises(ValueError):
+        schemes.glcm_blocked(img, 8, 1, 0, num_blocks=3)

@@ -1,0 +1,67 @@
+"""int8 KV cache (§Perf H3): decode with a quantized cache tracks the bf16
+path within quantization tolerance, and the cache is actually int8."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "hymba-1.5b"])
+def test_kv_quant_decode_close_to_fp(arch):
+    rng = np.random.default_rng(0)
+    base = get_config(arch).reduced()
+    quant = dataclasses.replace(base, kv_quant=True)
+    b, t = 2, 12
+
+    api_f = build_model(base)
+    api_q = build_model(quant)
+    params = api_f.init(jax.random.key(0))
+    batch = {"tokens": jnp.asarray(rng.integers(0, base.vocab_size, (b, t)), jnp.int32)}
+
+    lf, cf = jax.jit(lambda p, bb: api_f.prefill(p, bb, s_cache=t + 4))(params, batch)
+    lq, cq = jax.jit(lambda p, bb: api_q.prefill(p, bb, s_cache=t + 4))(params, batch)
+
+    # quantized cache leaves are int8 (+ f32 scales)
+    k_leaf = cq[0]["k"] if isinstance(cq, list) else None
+    if k_leaf is not None:
+        assert k_leaf.dtype == jnp.int8
+        assert cq[0]["k_scale"].dtype == jnp.float32
+
+    # prefill logits unaffected (quantization applies to the cache only)
+    np.testing.assert_allclose(np.asarray(lq), np.asarray(lf), rtol=2e-2, atol=2e-3)
+
+    nxt = jnp.asarray(rng.integers(0, base.vocab_size, (b, 1)), jnp.int32)
+    pos = jnp.full((b,), t, jnp.int32)
+    df, _ = jax.jit(api_f.decode_step)(params, cf, nxt, pos)
+    dq, _ = jax.jit(api_q.decode_step)(params, cq, nxt, pos)
+    # int8 KV error bound: logits agree to a few percent
+    err = np.abs(np.asarray(dq) - np.asarray(df)).max()
+    rel = err / max(np.abs(np.asarray(df)).max(), 1e-6)
+    assert rel < 0.08, f"{arch}: int8 KV decode error too large ({rel:.3f})"
+
+
+def test_kv_quant_greedy_tokens_match():
+    """End-to-end: greedy decode with int8 KV produces the same tokens
+    (the argmax is robust to small logit perturbations)."""
+    import dataclasses as dc
+
+    from repro.serve.engine import Engine, ServeConfig
+
+    rng = np.random.default_rng(1)
+    base = get_config("smollm-135m").reduced()
+    api = build_model(base)
+    params = api.init(jax.random.key(1))
+    prompts = rng.integers(0, base.vocab_size, (2, 6)).astype(np.int32)
+
+    out_f = Engine(base, params, ServeConfig(max_new_tokens=6, s_cache=32)).generate(prompts)
+    quant = dc.replace(base, kv_quant=True)
+    out_q = Engine(quant, params, ServeConfig(max_new_tokens=6, s_cache=32)).generate(prompts)
+    # allow at most one divergence (argmax ties under quantization noise)
+    mismatches = (out_f != out_q).sum()
+    assert mismatches <= 2, f"too many divergent tokens: {mismatches}"

@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests: a REDUCED same-family config runs one
+forward + one train-loss step (and a prefill→decode step) on CPU, asserting
+shapes and finiteness. Full configs are exercised only by the dry-run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import build_model
+
+
+def _batch(cfg, rng, b=2, t=16):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, t)), jnp.int32)}
+    if cfg.embeds_input and not cfg.is_encoder_decoder:
+        batch["embeds"] = jnp.asarray(rng.normal(size=(b, t, cfg.d_model)), jnp.float32)
+    if cfg.is_encoder_decoder:
+        batch["enc_embeds"] = jnp.asarray(rng.normal(size=(b, t, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_loss(arch):
+    rng = np.random.default_rng(0)
+    cfg = get_config(arch).reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    batch = _batch(cfg, rng)
+    logits, aux = jax.jit(api.forward)(params, batch)
+    b, t = batch["tokens"].shape
+    assert logits.shape == (b, t, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+    loss, metrics = jax.jit(api.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss {loss}"
+    assert float(metrics["nll"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_grad(arch):
+    """One SGD step: grads exist for every param and are finite."""
+    rng = np.random.default_rng(1)
+    cfg = get_config(arch).reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.key(1))
+    batch = _batch(cfg, rng)
+
+    def loss_fn(p):
+        return api.loss(p, batch)[0]
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert bool(jnp.isfinite(loss))
+    finite = jax.tree.map(lambda g: bool(jnp.isfinite(g).all()), grads)
+    assert all(jax.tree.leaves(finite)), f"{arch}: non-finite grads"
+    norms = [float(jnp.linalg.norm(g)) for g in jax.tree.leaves(grads)]
+    assert any(n > 0 for n in norms), f"{arch}: all-zero grads"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """Prefill then one decode step must equal the full forward pass at the
+    next position (greedy logits match) — validates every cache layout."""
+    rng = np.random.default_rng(2)
+    cfg = get_config(arch).reduced()
+    if cfg.num_experts:
+        # Capacity drops (GShard semantics) are data-dependent on T; use a
+        # no-drop capacity so decode(T=1) and forward(T=t+1) are comparable.
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    api = build_model(cfg)
+    params = api.init(jax.random.key(2))
+    b, t = 2, 12
+    batch = _batch(cfg, rng, b=b, t=t)
+    toks = batch["tokens"]
+
+    logits_pre, caches = jax.jit(lambda p, bt: api.prefill(p, bt, s_cache=t + 4))(
+        params, batch)
+    assert logits_pre.shape == (b, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits_pre).all())
+
+    # Full-forward logits at the last position must match prefill's output.
+    logits_full, _ = jax.jit(api.forward)(params, batch)
+    np.testing.assert_allclose(
+        np.asarray(logits_pre), np.asarray(logits_full[:, -1, :]),
+        rtol=2e-2, atol=2e-3, err_msg=f"{arch}: prefill != forward",
+    )
+
+    if cfg.embeds_input and not cfg.is_encoder_decoder:
+        return  # decode continuation needs token embeddings for new tokens
+
+    # Decode one step with the true next token and compare against a full
+    # forward over t+1 tokens.
+    nxt = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 1)), jnp.int32)
+    pos = jnp.full((b,), t, jnp.int32)
+    logits_dec, _ = jax.jit(api.decode_step)(params, caches, nxt, pos)
+    assert logits_dec.shape == (b, cfg.padded_vocab)
+
+    batch2 = dict(batch)
+    batch2["tokens"] = jnp.concatenate([toks, nxt], axis=1)
+    if cfg.is_encoder_decoder:
+        batch2["enc_embeds"] = batch["enc_embeds"]
+    logits_full2, _ = jax.jit(api.forward)(params, batch2)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec), np.asarray(logits_full2[:, -1, :]),
+        rtol=2e-2, atol=2e-3, err_msg=f"{arch}: decode != forward",
+    )
+
+
+def test_param_counts_full_configs():
+    """Full configs instantiate abstractly (eval_shape — no allocation) and
+    land near their nameplate sizes."""
+    expect = {
+        "smollm-135m": (0.10, 0.25),
+        "smollm-360m": (0.30, 0.50),
+        "olmo-1b": (0.9, 1.5),
+        "internlm2-1.8b": (1.5, 2.3),
+        "mamba2-130m": (0.10, 0.22),
+        "hymba-1.5b": (1.2, 2.2),
+        "mixtral-8x7b": (44.0, 50.0),
+        "llava-next-34b": (32.0, 37.0),
+        "whisper-medium": (0.55, 0.95),
+        "arctic-480b": (455.0, 500.0),
+    }
+    from repro.models import build_model as bm
+
+    for arch, (lo, hi) in expect.items():
+        cfg = get_config(arch)
+        api = bm(cfg)
+        shapes = jax.eval_shape(api.init, jax.random.key(0))
+        n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes)) / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.3f}B params outside [{lo}, {hi}]B"

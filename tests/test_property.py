@@ -1,0 +1,135 @@
+"""Hypothesis property tests over the system's invariants."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.haralick import haralick_features
+from repro.core.quantize import quantize_uniform
+from repro.core.schemes import glcm_blocked, glcm_onehot, glcm_scatter
+from repro.kernels.glcm_kernel import glcm_vote_pallas
+from repro.kernels.ops import onehot_count
+from repro.kernels.ref import glcm_offsets
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+levels_st = st.sampled_from([4, 8, 16])
+img_st = lambda lv: hnp.arrays(
+    np.int32,
+    st.tuples(st.integers(6, 24), st.integers(6, 24)),
+    elements=st.integers(0, lv - 1),
+)
+dtheta_st = st.tuples(st.integers(1, 3), st.sampled_from([0, 45, 90, 135]))
+
+
+@hypothesis.given(levels=levels_st, data=st.data())
+@hypothesis.settings(**SETTINGS)
+def test_glcm_total_equals_pair_count(levels, data):
+    """Σ P(i,j) == number of valid pixel pairs (paper Eq. (1) cardinality)."""
+    img = data.draw(img_st(levels))
+    d, theta = data.draw(dtheta_st)
+    h, w = img.shape
+    dy, dx = glcm_offsets(d, theta)
+    hypothesis.assume(dy < h and abs(dx) < w)
+    g = np.asarray(glcm_onehot(jnp.asarray(img), levels, d, theta))
+    assert g.sum() == (h - dy) * (w - abs(dx))
+    assert (g >= 0).all()
+
+
+@hypothesis.given(levels=levels_st, data=st.data())
+@hypothesis.settings(**SETTINGS)
+def test_schemes_agree(levels, data):
+    """Scheme 1 == Scheme 2 == Pallas kernel on arbitrary images."""
+    img = data.draw(img_st(levels))
+    d, theta = data.draw(dtheta_st)
+    dy, dx = glcm_offsets(d, theta)
+    hypothesis.assume(dy < img.shape[0] and abs(dx) < img.shape[1])
+    j = jnp.asarray(img)
+    s1 = np.asarray(glcm_scatter(j, levels, d, theta))
+    s2 = np.asarray(glcm_onehot(j, levels, d, theta))
+    np.testing.assert_array_equal(s1, s2)
+    from repro.kernels.ref import pair_planes
+
+    a, r = pair_planes(j, d, theta)
+    s3 = np.asarray(
+        glcm_vote_pallas(
+            a.reshape(-1), r.reshape(-1), levels=levels, chunk=256, interpret=True
+        )
+    )
+    np.testing.assert_array_equal(s1, s3)
+
+
+@hypothesis.given(levels=levels_st, data=st.data())
+@hypothesis.settings(**SETTINGS)
+def test_transpose_duality(levels, data):
+    """Reversing the scan direction transposes the GLCM: counting pairs
+    (assoc→ref) at +offset equals counting (ref→assoc) at the mirrored
+    offset, i.e. P_rev = P.T — the identity behind 'symmetric' GLCMs."""
+    img = data.draw(img_st(levels))
+    d = data.draw(st.integers(1, 3))
+    hypothesis.assume(d < img.shape[0] and d < img.shape[1])
+    j = jnp.asarray(img)
+    fwd = np.asarray(glcm_onehot(j, levels, d, 0))
+    rev = np.asarray(glcm_onehot(j[:, ::-1], levels, d, 0))
+    np.testing.assert_array_equal(rev, fwd.T)
+    # 90°: vertical flip mirrors the vertical offset.
+    fwd90 = np.asarray(glcm_onehot(j, levels, d, 90))
+    rev90 = np.asarray(glcm_onehot(j[::-1, :], levels, d, 90))
+    np.testing.assert_array_equal(rev90, fwd90.T)
+
+
+@hypothesis.given(
+    img=hnp.arrays(
+        np.float32,
+        st.tuples(st.integers(4, 16), st.integers(4, 16)),
+        elements=st.floats(-1e3, 1e3, width=32),
+    ),
+    levels=levels_st,
+)
+@hypothesis.settings(**SETTINGS)
+def test_quantize_bounds(img, levels):
+    q = np.asarray(quantize_uniform(jnp.asarray(img), levels))
+    assert q.min() >= 0 and q.max() <= levels - 1
+
+
+@hypothesis.given(levels=levels_st, data=st.data())
+@hypothesis.settings(**SETTINGS)
+def test_blocked_exactness(levels, data):
+    """Scheme 3 partitioning is exact for any divisor block count."""
+    img = data.draw(
+        hnp.arrays(np.int32, st.tuples(st.sampled_from([16, 32]), st.integers(8, 20)),
+                   elements=st.integers(0, levels - 1))
+    )
+    d, theta = data.draw(st.tuples(st.integers(1, 2), st.sampled_from([0, 45, 90, 135])))
+    nb = data.draw(st.sampled_from([2, 4, 8]))
+    j = jnp.asarray(img)
+    want = np.asarray(glcm_scatter(j, levels, d, theta))
+    got = np.asarray(glcm_blocked(j, levels, d, theta, num_blocks=nb))
+    np.testing.assert_array_equal(got, want)
+
+
+@hypothesis.given(
+    idx=hnp.arrays(np.int32, st.tuples(st.integers(1, 6), st.integers(1, 32)),
+                   elements=st.integers(0, 15)),
+)
+@hypothesis.settings(**SETTINGS)
+def test_onehot_count_conservation(idx):
+    """Counts sum to the number of indices (per row) — router load stats
+    must conserve tokens."""
+    c = np.asarray(onehot_count(jnp.asarray(idx), 16))
+    np.testing.assert_allclose(c.sum(-1), idx.shape[-1])
+    assert (c >= 0).all()
+
+
+@hypothesis.given(
+    counts=hnp.arrays(np.float32, st.tuples(st.sampled_from([4, 8])).map(lambda t: (t[0], t[0])),
+                      elements=st.floats(0, 100, width=32)),
+)
+@hypothesis.settings(**SETTINGS)
+def test_haralick_finite(counts):
+    hypothesis.assume(counts.sum() > 0)
+    f = np.asarray(haralick_features(jnp.asarray(counts)))
+    assert np.isfinite(f).all()
+    assert 0 <= f[0] <= 1.0 + 1e-5  # energy of a normalized distribution

@@ -1,0 +1,49 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantize import quantize_equalized, quantize_uniform
+
+
+@pytest.mark.parametrize("levels", [2, 8, 32, 256])
+def test_uniform_bounds_and_dtype(rng, levels):
+    img = rng.integers(0, 256, (32, 32)).astype(np.uint8)
+    q = np.asarray(quantize_uniform(jnp.asarray(img), levels, vmin=0, vmax=255))
+    assert q.dtype == np.int32
+    assert q.min() >= 0 and q.max() <= levels - 1
+
+
+def test_uniform_monotone(rng):
+    img = np.sort(rng.integers(0, 256, (64,))).astype(np.float32).reshape(8, 8)
+    q = np.asarray(quantize_uniform(jnp.asarray(img), 8, vmin=0, vmax=255)).reshape(-1)
+    assert (np.diff(q) >= 0).all()
+
+
+def test_uniform_exact_binning():
+    # 0..255 into 8 levels of 32 each
+    img = jnp.arange(256, dtype=jnp.float32).reshape(16, 16)
+    q = np.asarray(quantize_uniform(img, 8, vmin=0, vmax=256))
+    want = (np.arange(256) // 32).reshape(16, 16)
+    np.testing.assert_array_equal(q, want)
+
+
+def test_equalized_balanced_population(rng):
+    img = rng.normal(size=(64, 64)).astype(np.float32)
+    q = np.asarray(quantize_equalized(jnp.asarray(img), 8))
+    counts = np.bincount(q.reshape(-1), minlength=8)
+    assert counts.min() > 0
+    # near-equal bins for a continuous distribution
+    assert counts.max() / counts.min() < 1.6
+
+
+def test_constant_image_no_nan():
+    img = jnp.full((16, 16), 7.0)
+    q = np.asarray(quantize_uniform(img, 8))
+    assert np.isfinite(q).all() and q.min() >= 0 and q.max() <= 7
+
+
+def test_bad_levels():
+    with pytest.raises(ValueError):
+        quantize_uniform(jnp.zeros((4, 4)), 1)
+    with pytest.raises(ValueError):
+        quantize_uniform(jnp.zeros((4, 4)), 257)

@@ -1,0 +1,64 @@
+"""Roofline machinery: HLO collective-byte parser + term arithmetic."""
+
+import numpy as np
+
+from repro.launch.roofline import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    Roofline,
+    _shape_bytes,
+    collective_bytes,
+)
+
+HLO = """
+HloModule jit_step
+ENTRY %main {
+  %ag = bf16[1024,512]{1,0} all-gather(%p0), replica_groups=...
+  %ar = f32[256]{0} all-reduce(%x), to_apply=%add
+  %rs = bf16[64,64]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = bf16[8,16,32]{2,1,0} all-to-all(%z), dimensions={0}
+  %cp = u8[100]{0} collective-permute(%w), source_target_pairs=...
+  %ags = (bf16[2,2]{1,0}, bf16[2,2]{1,0}) all-gather-start(%q)
+  %not_a_collective = f32[10]{0} add(%a, %b)
+}
+"""
+
+
+def test_collective_bytes_parses_all_ops():
+    out = collective_bytes(HLO)
+    assert out["all-gather"] == 1024 * 512 * 2 + 2 * 2 * 2 * 2  # incl. -start tuple
+    assert out["all-reduce"] == 256 * 4
+    assert out["reduce-scatter"] == 64 * 64 * 2
+    assert out["all-to-all"] == 8 * 16 * 32 * 2
+    assert out["collective-permute"] == 100
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[8,128]") == 8 * 128 * 2
+    assert _shape_bytes("f32[10]") == 40
+    assert _shape_bytes("(bf16[2,2], f32[4])") == 8 + 16
+    assert _shape_bytes("pred[16]") == 16
+    assert _shape_bytes("token[]") == 0  # unknown dtype ignored
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="x", cell="train_4k", mesh="single", chips=256,
+                 hlo_flops=197e12 * 0.01,          # 10 ms compute
+                 hlo_bytes=819e9 * 0.05,           # 50 ms memory
+                 coll_bytes={"all-reduce": int(50e9 * 0.02)},  # 20 ms coll
+                 model_flops=197e12 * 0.01 * 256 * 0.5)
+    np.testing.assert_allclose(r.t_compute, 0.01)
+    np.testing.assert_allclose(r.t_memory, 0.05)
+    np.testing.assert_allclose(r.t_collective, 0.02)
+    assert r.bottleneck == "memory"
+    np.testing.assert_allclose(r.useful_ratio, 0.5)
+    np.testing.assert_allclose(r.roofline_fraction, 0.2)
+    d = r.to_dict()
+    assert d["bottleneck"] == "memory"
+
+
+def test_constants_are_v5e():
+    assert PEAK_FLOPS == 197e12
+    assert HBM_BW == 819e9
+    assert ICI_BW == 50e9

@@ -1,0 +1,119 @@
+"""Sharding rules: spec resolution per param path, divisibility of every
+full config against the production mesh factors, cache/batch specs."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.sharding.partition import (
+    batch_axes,
+    cache_specs,
+    optimizer_state_specs,
+    param_specs,
+    spec_for_path,
+)
+
+MODEL_WAYS = 16
+DATA_WAYS = 16
+
+
+def test_spec_for_known_paths():
+    cfg = get_config("llava-next-34b")  # fsdp arch
+    assert spec_for_path(cfg, "embeddings/embed", 2) == P("model", "data")
+    assert spec_for_path(cfg, "group_0/attn/wq", 4) == P(None, "data", None, None)
+    assert spec_for_path(cfg, "group_0/mlp/w_gate", 3) == P(None, "data", "model")
+    assert spec_for_path(cfg, "group_0/mlp/w_down", 3) == P(None, "model", "data")
+    assert spec_for_path(cfg, "group_0/ln1/scale", 2) == P(None, None)
+
+    small = get_config("smollm-135m")  # replicated arch
+    assert spec_for_path(small, "group_0/mlp/w_gate", 3) == P(None, None, None)
+    assert spec_for_path(small, "embeddings/embed", 2) == P("model", None)
+
+
+def test_moe_expert_specs():
+    arc = get_config("arctic-480b")   # expert-parallel
+    assert spec_for_path(arc, "group_0/moe/w_gate", 4) == P(None, "model", "data", None)
+    assert spec_for_path(arc, "group_0/moe/w_down", 4) == P(None, "model", None, "data")
+    mix = get_config("mixtral-8x7b")  # TP'd experts
+    assert spec_for_path(mix, "group_0/moe/w_gate", 4) == P(None, None, "data", "model")
+    assert spec_for_path(mix, "group_0/moe/router", 3) == P(None, None, None)
+
+
+def test_mamba_fsdp_specs():
+    hy = get_config("hymba-1.5b")
+    assert spec_for_path(hy, "group_0/mamba/in_proj", 3) == P(None, "data", None)
+    assert spec_for_path(hy, "group_0/mamba/conv_w", 3) == P(None, None, None)
+    mb = get_config("mamba2-130m")  # not fsdp → replicated
+    assert spec_for_path(mb, "group_0/mamba/in_proj", 3) == P(None, None, None)
+
+
+def _check_divisible(shape, spec, ways={"data": DATA_WAYS, "model": MODEL_WAYS,
+                                        "pod": 2}):
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = int(np.prod([ways[a] for a in axes]))
+        assert dim % n == 0, f"dim {dim} not divisible by {n} ({spec})"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_every_param_divisible_on_production_mesh(arch):
+    """Every full-config param leaf must divide by its spec'd mesh axes —
+    the invariant the dry-run depends on (GSPMD refuses uneven shards)."""
+    cfg = get_config(arch)
+    from repro.models import build_model
+
+    params = jax.eval_shape(lambda: build_model(cfg).init(jax.random.key(0)))
+    specs = param_specs(cfg, params)
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_s = tdef.flatten_up_to(jax.tree.map(
+        lambda s: s, specs, is_leaf=lambda x: isinstance(x, P)))
+    for leaf, spec in zip(flat_p, flat_s):
+        _check_divisible(leaf.shape, spec)
+
+
+def test_vocab_padding_all_archs():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        assert cfg.padded_vocab % 128 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size
+        assert cfg.padded_vocab % MODEL_WAYS == 0
+        assert cfg.d_ff % MODEL_WAYS == 0 or cfg.d_ff == 0
+
+
+def test_optimizer_state_specs_factored():
+    specs = {"w": P(None, "data", "model")}
+    opt = {"step": 0, "v": {"w": {"vr": np.zeros((2, 3)), "vc": np.zeros((2, 4))}}}
+    out = optimizer_state_specs(specs, opt)
+    assert out["v"]["w"]["vr"] == P(None, "data")
+    assert out["v"]["w"]["vc"] == P(None, "model")
+    assert out["step"] == P()
+
+
+def test_cache_specs_structure():
+    import jax.numpy as jnp
+
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = get_config("smollm-135m")
+    caches = [{"k": jax.ShapeDtypeStruct((2, 4, 8, 3, 16), jnp.bfloat16),
+               "v": jax.ShapeDtypeStruct((2, 4, 8, 3, 16), jnp.bfloat16),
+               "pos": jax.ShapeDtypeStruct((2, 4, 8), jnp.int32)}]
+    # spec construction is mesh-independent (P objects)
+    class FakeMesh:
+        axis_names = ("data", "model")
+    specs = cache_specs(cfg, FakeMesh(), caches, batch_sharded=True)
+    assert specs[0]["k"] == P(None, ("data",), "model", None, None)
+    assert specs[0]["pos"] == P(None, ("data",), "model")
+
+
+def test_batch_axes_multi_pod():
+    class SinglePod:
+        axis_names = ("data", "model")
+    class MultiPod:
+        axis_names = ("pod", "data", "model")
+    assert batch_axes(SinglePod()) == ("data",)
+    assert batch_axes(MultiPod()) == ("pod", "data")
