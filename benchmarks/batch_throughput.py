@@ -1,0 +1,50 @@
+"""Batched multi-image GLCM throughput — images/sec vs batch size per scheme.
+
+The serving question the paper's single-image tables don't answer: how much
+wall-clock does amortizing dispatch/launch overhead over a batch buy? The
+jnp schemes batch via vmap (one fused XLA program per batch); the Pallas
+schemes carry the batch as a leading grid axis, so the whole stack is ONE
+kernel launch instead of B. The ``derived`` column reports images/sec; the
+``xB`` suffix rows let the speedup-vs-B=1 curve be read directly.
+
+Runs on CPU (interpret-mode Pallas) — the numbers are not TPU numbers, but
+the *shape* of the curve (dispatch amortization) is what the benchmark
+tracks in CI.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.glcm import glcm
+
+SIZE = 128          # per-image resolution (kept small: CPU CI budget)
+LEVELS = 16
+BATCH_SIZES = (1, 2, 4, 8)
+SCHEMES = ("scatter", "onehot", "blocked", "pallas", "pallas_fused")
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    imgs = jnp.asarray(
+        rng.integers(0, LEVELS, size=(max(BATCH_SIZES), SIZE, SIZE)), jnp.int32
+    )
+    for scheme in SCHEMES:
+        base_ips = None
+        for b in BATCH_SIZES:
+            stack = imgs[:b]
+            fn = jax.jit(
+                functools.partial(glcm, levels=LEVELS, d=1, theta=0, scheme=scheme)
+            )
+            us = time_fn(fn, stack)
+            ips = b / (us * 1e-6)
+            if base_ips is None:
+                base_ips = ips
+            emit(
+                f"batch_throughput/{scheme}/B{b}",
+                us,
+                f"images_per_sec={ips:.1f}_x{ips / base_ips:.2f}",
+            )

@@ -10,7 +10,7 @@ import sys
 import time
 
 MODULES = ("table2_scheme1", "table3_scheme2", "table4_transfer",
-           "fig4_async", "fig5_speedup", "moe_dispatch")
+           "fig4_async", "fig5_speedup", "moe_dispatch", "batch_throughput")
 
 
 def main() -> None:

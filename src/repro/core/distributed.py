@@ -18,7 +18,10 @@ received by the bottom shard is a ``-1`` sentinel, whose one-hot row is zero
 
 Also provided: ``glcm_auto_sharded`` — the same math expressed with plain
 sharding constraints, letting GSPMD insert the reduction; used to
-cross-validate the explicit version and in the dry-run roofline.
+cross-validate the explicit version and in the dry-run roofline — and
+``glcm_sharded_batch``, which adds the serving dimension: a (B, H, W) stack
+of images whose *batch* axis is sharded over one mesh axis while the rows of
+each image reuse the same halo-exchange sharding over another.
 """
 
 from __future__ import annotations
@@ -31,7 +34,17 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.kernels.ref import glcm_offsets
 
-__all__ = ["glcm_sharded", "glcm_auto_sharded", "local_partial_glcm"]
+# jax >= 0.6 exposes shard_map at the top level; 0.4.x keeps it experimental.
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+__all__ = [
+    "glcm_sharded",
+    "glcm_sharded_batch",
+    "glcm_auto_sharded",
+    "local_partial_glcm",
+]
 
 
 def _onehot(v: jax.Array, levels: int) -> jax.Array:
@@ -109,13 +122,80 @@ def glcm_sharded(
         return jax.lax.psum(part, flat_axis)
 
     spec_axes = axes if len(axes) > 1 else axes[0]
-    fn = jax.shard_map(
+    fn = _shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=P(spec_axes, None),
         out_specs=P(None, None),
     )
     return fn(img)
+
+
+def glcm_sharded_batch(
+    imgs: jax.Array,
+    levels: int,
+    d: int,
+    theta: int,
+    mesh: Mesh,
+    *,
+    batch_axis: str = "data",
+    row_axis: str | None = "model",
+) -> jax.Array:
+    """Exact GLCMs of a (B, H, W) image stack sharded over the mesh.
+
+    The batch axis is sharded over ``batch_axis`` (pure data parallelism —
+    the serving layout: independent requests land on independent devices)
+    and, when ``row_axis`` is given, the rows of every image are additionally
+    sharded over ``row_axis`` with the same ppermute halo exchange as
+    :func:`glcm_sharded` (Scheme 3's Pad region as a boundary exchange).
+    ``row_axis=None`` keeps whole images per device.
+
+    Returns the full (B, L, L) int32 GLCM stack; the batch axis of the
+    result stays sharded over ``batch_axis``, each (L, L) slice replicated
+    within its row-sharding group.
+    """
+    if imgs.ndim != 3:
+        raise ValueError(f"expected (B, H, W) image stack, got {imgs.shape}")
+    dy, dx = glcm_offsets(d, theta)
+    b, h, w = imgs.shape
+    n_batch = mesh.shape[batch_axis]
+    if b % n_batch:
+        raise ValueError(f"batch {b} not divisible by {n_batch} shards")
+    n_rows = mesh.shape[row_axis] if row_axis is not None else 1
+    if h % n_rows:
+        raise ValueError(f"image height {h} not divisible by {n_rows} shards")
+    local_h = h // n_rows
+    if dy > local_h:
+        raise ValueError(f"halo dy={dy} exceeds shard height {local_h}")
+
+    def shard_fn(shard):
+        # shard: (B/n_batch, local_h, W). Rows travel exactly as in
+        # glcm_sharded, with the batch dim riding along in the ppermute.
+        if row_axis is not None and dy > 0:
+            top = shard[:, :dy, :]
+            perm = [(i, i - 1) for i in range(1, n_rows)]
+            halo = jax.lax.ppermute(top, row_axis, perm)
+            is_bottom = jax.lax.axis_index(row_axis) == n_rows - 1
+            halo = jnp.where(is_bottom, jnp.full_like(halo, -1), halo)
+        else:
+            # No row sharding (or dy == 0): the halo is the image's own
+            # bottom edge — dy sentinel rows that vote into the dead bin.
+            halo = jnp.full((shard.shape[0], dy, w), -1, shard.dtype)
+        ext = jnp.concatenate([shard, halo], axis=1).astype(jnp.int32)
+        part = jax.vmap(
+            lambda e: local_partial_glcm(e, levels, dy, dx, local_h)
+        )(ext)
+        if row_axis is not None:
+            part = jax.lax.psum(part, row_axis)
+        return part
+
+    fn = _shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=P(batch_axis, row_axis, None),
+        out_specs=P(batch_axis, None, None),
+    )
+    return fn(imgs)
 
 
 def glcm_auto_sharded(

@@ -11,6 +11,23 @@ Schemes (see DESIGN.md §2 for the CUDA→TPU mapping):
   "pallas"        pair-stream Pallas voting kernel (production path)
   "pallas_fused"  fused tiled Pallas kernel (multi-offset, one image pass)
   "auto"          "onehot" on CPU, "pallas" on TPU
+
+Batched API
+-----------
+Both entry points accept a single (H, W) image OR a (B, H, W) stack; with a
+stack, outputs gain a leading batch axis:
+
+    P = glcm.glcm(imgs, levels=32)            # (B, L, L)
+    F = glcm.glcm_features(imgs, levels=32)   # (B, n_pairs, 14)
+
+The batched result is bit-exact with ``jnp.stack([glcm(imgs[i], ...) for i])``
+for every scheme. The jnp schemes batch via ``vmap`` (one fused XLA
+program); the Pallas schemes carry the batch as a leading **grid axis** so
+all B images are processed in ONE kernel launch — the launch-amortization
+that turns per-image latency into serving throughput (see
+``benchmarks/batch_throughput.py`` for images/sec vs batch size).
+Quantization is applied per image (each image's own value range), matching
+the single-image semantics exactly.
 """
 
 from __future__ import annotations
@@ -34,10 +51,21 @@ def _maybe_quantize(image: jax.Array, levels: int, quantize: str | None) -> jax.
     if quantize is None:
         return image.astype(jnp.int32)
     if quantize == "uniform":
-        return quantize_uniform(image, levels)
-    if quantize == "equalized":
-        return quantize_equalized(image, levels)
-    raise ValueError(f"unknown quantize mode {quantize!r}")
+        fn = lambda im: quantize_uniform(im, levels)
+    elif quantize == "equalized":
+        fn = lambda im: quantize_equalized(im, levels)
+    else:
+        raise ValueError(f"unknown quantize mode {quantize!r}")
+    # Per-image quantization: each image of a batch uses its OWN value range
+    # (identical to quantizing the images one at a time).
+    return jax.vmap(fn)(image) if image.ndim == 3 else fn(image)
+
+
+def _check_ndim(image: jax.Array) -> None:
+    if image.ndim not in (2, 3):
+        raise ValueError(
+            f"expected (H, W) image or (B, H, W) stack, got shape {image.shape}"
+        )
 
 
 def glcm(
@@ -53,7 +81,12 @@ def glcm(
     copies: int = 1,
     num_blocks: int = 4,
 ) -> jax.Array:
-    """Gray-level co-occurrence matrix of a 2-D image. Returns (L, L) f32."""
+    """Gray-level co-occurrence matrix of image(s), float32.
+
+    (H, W) input → (L, L); (B, H, W) input → (B, L, L), computed batched
+    (vmap for the jnp schemes, a batch grid axis for the Pallas kernels).
+    """
+    _check_ndim(image)
     img = _maybe_quantize(image, levels, quantize)
     if scheme == "auto":
         scheme = "pallas" if jax.default_backend() == "tpu" else "onehot"
@@ -66,14 +99,16 @@ def glcm(
     elif scheme == "pallas":
         out = kops.glcm_pallas(img, levels, d, theta).astype(jnp.float32)
     elif scheme == "pallas_fused":
-        out = kops.glcm_pallas_multi(img, levels, ((d, theta),))[0].astype(jnp.float32)
+        out = kops.glcm_pallas_multi(img, levels, ((d, theta),))[..., 0, :, :].astype(
+            jnp.float32
+        )
     else:
         raise ValueError(f"unknown scheme {scheme!r}")
     out = out.astype(jnp.float32)
     if symmetric:
-        out = out + out.T
+        out = out + jnp.swapaxes(out, -1, -2)
     if normalize:
-        out = out / jnp.maximum(out.sum(), 1.0)
+        out = out / jnp.maximum(out.sum(axis=(-2, -1), keepdims=True), 1.0)
     return out
 
 
@@ -85,7 +120,11 @@ def glcm_features(
     scheme: Scheme = "auto",
     quantize: str | None = "uniform",
 ) -> jax.Array:
-    """Image → (len(pairs), 14) Haralick features (normalized GLCMs)."""
+    """Image(s) → Haralick features over ``pairs`` offsets (normalized GLCMs).
+
+    (H, W) input → (len(pairs), 14); (B, H, W) input → (B, len(pairs), 14).
+    """
+    _check_ndim(image)
     img = _maybe_quantize(image, levels, quantize)
     if scheme == "auto":
         scheme = "pallas_fused" if jax.default_backend() == "tpu" else "onehot"
@@ -93,6 +132,7 @@ def glcm_features(
         mats = kops.glcm_pallas_multi(img, levels, pairs).astype(jnp.float32)
     else:
         mats = jnp.stack(
-            [glcm(img, levels, d, t, scheme=scheme, quantize=None) for d, t in pairs]
+            [glcm(img, levels, d, t, scheme=scheme, quantize=None) for d, t in pairs],
+            axis=-3,
         )
     return haralick_features(mats)

@@ -11,6 +11,14 @@ exactly the paper's double buffer).
 ``GLCMStream`` is the generic engine; ``glcm_feature_stream`` is the
 convenience wrapper used by the texture-pipeline example (quantize → GLCM
 (multi-offset) → Haralick-14 per image, overlapped with the next transfer).
+
+Batching: ``glcm_feature_stream(..., batch_size=B)`` coalesces the incoming
+image stream into fixed (B, H, W) stacks before dispatch, so each device
+program amortizes its launch over B images (the transfer overlap still
+applies, now per-stack). Results are still yielded **per image, in order**;
+the final partial stack is padded (padding results dropped) so exactly one
+program shape is ever compiled. ``coalesce_images`` is the reusable grouping
+helper (also used by ``serve.engine.GLCMEngine``).
 """
 
 from __future__ import annotations
@@ -27,7 +35,30 @@ from repro.core.haralick import haralick_features
 from repro.core.quantize import quantize_uniform
 from repro.core.schemes import PAPER_PAIRS, glcm_multi
 
-__all__ = ["GLCMStream", "glcm_feature_stream"]
+__all__ = ["GLCMStream", "glcm_feature_stream", "coalesce_images"]
+
+
+def coalesce_images(
+    images: Iterable[np.ndarray], batch_size: int
+) -> Iterator[tuple[np.ndarray, int]]:
+    """Group an image stream into (stack, n_valid) fixed-size batches.
+
+    Every yielded stack has exactly ``batch_size`` images; a final partial
+    group is padded by repeating its last image (n_valid marks how many
+    leading entries are real), so downstream jit'd consumers see ONE shape.
+    """
+    if batch_size < 1:
+        raise ValueError("batch_size must be >= 1")
+    buf: list[np.ndarray] = []
+    for im in images:
+        buf.append(np.asarray(im))
+        if len(buf) == batch_size:
+            yield np.stack(buf), batch_size
+            buf = []
+    if buf:
+        k = len(buf)
+        buf.extend([buf[-1]] * (batch_size - k))
+        yield np.stack(buf), k
 
 
 class GLCMStream:
@@ -85,16 +116,42 @@ def glcm_feature_stream(
     pairs: tuple[tuple[int, int], ...] = PAPER_PAIRS,
     *,
     prefetch: int = 2,
+    batch_size: int = 1,
     vmin: float | None = 0.0,
     vmax: float | None = 255.0,
 ) -> Iterator[jax.Array]:
     """Yield (len(pairs), 14) Haralick feature tensors per input image,
-    with transfer/compute overlap."""
+    with transfer/compute overlap.
+
+    ``batch_size > 1`` coalesces the stream into (batch_size, H, W) stacks
+    (one device dispatch per stack); results are unpacked and yielded per
+    image in arrival order, so callers see the same protocol at any batch
+    size."""
+
+    def _quant(img):
+        return quantize_uniform(img, levels, vmin=vmin, vmax=vmax)
 
     @jax.jit
     def fn(img):
-        q = quantize_uniform(img, levels, vmin=vmin, vmax=vmax)
+        # Per-image quantization whether img is (H, W) or a (B, H, W) stack
+        # (matters when vmin/vmax are data-derived).
+        q = jax.vmap(_quant)(img) if img.ndim == 3 else _quant(img)
         g = glcm_multi(q, levels, pairs)
         return haralick_features(g)
 
-    return GLCMStream(fn, prefetch=prefetch)(images)
+    if batch_size == 1:
+        return GLCMStream(fn, prefetch=prefetch)(images)
+
+    def unbatched() -> Iterator[jax.Array]:
+        counts: collections.deque[int] = collections.deque()
+
+        def stacks():
+            for stack, k in coalesce_images(images, batch_size):
+                counts.append(k)  # enqueue order == GLCMStream yield order
+                yield stack
+
+        for out in GLCMStream(fn, prefetch=prefetch)(stacks()):
+            for i in range(counts.popleft()):
+                yield out[i]
+
+    return unbatched()

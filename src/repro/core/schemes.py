@@ -11,6 +11,12 @@ Scheme 3 (stream-pipelined blocks)  → ``glcm_blocked``   here (single device,
 All functions operate on an already-quantized int image (``core.quantize``)
 and return float32 count matrices of shape (L, L) (or (n_pairs, L, L) for the
 multi-offset variants), matching ``kernels.ref.glcm_reference`` exactly.
+
+Every scheme is **batch-aware**: passing a (B, H, W) stack instead of a
+single (H, W) image returns the stacked result with a leading batch axis
+((B, L, L) / (B, n_pairs, L, L)), computed under ``jax.vmap`` so XLA fuses
+the B instances into one batched program — numerically identical to a
+Python loop over images, but one dispatch.
 """
 
 from __future__ import annotations
@@ -34,10 +40,31 @@ __all__ = [
 PAPER_PAIRS: tuple[tuple[int, int], ...] = ((1, 0), (1, 45), (4, 0), (4, 45))
 
 
+def _batch_aware(fn):
+    """Lift a (H, W) → (...) scheme to also accept (B, H, W) via vmap.
+
+    Non-image arguments stay static (closed over), so the vmapped body
+    compiles once and is shared by every image in the stack.
+    """
+
+    @functools.wraps(fn)
+    def wrapper(img, *args, **kwargs):
+        if img.ndim == 3:
+            return jax.vmap(lambda im: fn(im, *args, **kwargs))(img)
+        if img.ndim != 2:
+            raise ValueError(
+                f"expected (H, W) or (B, H, W) image, got shape {img.shape}"
+            )
+        return fn(img, *args, **kwargs)
+
+    return wrapper
+
+
 # ---------------------------------------------------------------------------
 # Scheme 1 — contended scatter (the faithful atomicAdd analogue)
 # ---------------------------------------------------------------------------
 
+@_batch_aware
 def glcm_scatter(
     img: jax.Array,
     levels: int,
@@ -71,6 +98,7 @@ def _onehot(v: jax.Array, levels: int, dtype) -> jax.Array:
     return (v[:, None] == iota).astype(dtype)
 
 
+@_batch_aware
 def glcm_onehot(
     img: jax.Array,
     levels: int,
@@ -121,6 +149,7 @@ def glcm_onehot(
     return glcm
 
 
+@_batch_aware
 def glcm_multi(
     img: jax.Array,
     levels: int,
@@ -150,6 +179,7 @@ def glcm_multi(
 # Scheme 3 — blocked processing with halo (single-device form)
 # ---------------------------------------------------------------------------
 
+@_batch_aware
 def glcm_blocked(
     img: jax.Array,
     levels: int,

@@ -21,13 +21,19 @@ Two kernels:
     double-buffers the HBM→VMEM tile DMA against compute — exactly the
     two-stream timeline of paper Fig. 3, but structural.
 
+Both kernels carry a **batch grid axis**: the grid is (B, steps) and the
+output block index_map pins each image's accumulator to its batch slot, so a
+(B, H, W) stack is processed in ONE ``pallas_call`` launch instead of B —
+the launch-amortization that dominates serving throughput (see
+``benchmarks/batch_throughput.py``). Grid iteration on TPU is sequential per
+core with the LAST axis innermost, so for a fixed batch slot the constant
+``index_map`` output block acts as a revisited accumulator: it is zeroed at
+step 0 of that image and incremented by every subsequent grid step.
+Single-image (2-D) inputs are handled as B=1 and squeezed on exit.
+
 Accumulation is int32 (one-hot int8 matmuls with ``preferred_element_type=
 int32``) so counts are exact up to 2³¹ — f32 accumulation would silently
 round past 2²⁴ on gigapixel images.
-
-Grid iteration on TPU is sequential per core, so the constant-``index_map``
-output block acts as a revisited accumulator: it is zeroed at program 0 and
-incremented by every grid step.
 """
 
 from __future__ import annotations
@@ -75,17 +81,19 @@ def _vote_matmul(r: jax.Array, a: jax.Array, levels: int, copies: int) -> jax.Ar
 
 
 # ---------------------------------------------------------------------------
-# Kernel 1: pair-stream voting
+# Kernel 1: pair-stream voting (grid = (B, steps))
 # ---------------------------------------------------------------------------
 
 def _vote_kernel(a_ref, r_ref, o_ref, *, levels: int, copies: int):
-    @pl.when(pl.program_id(0) == 0)
+    # Steps are the innermost grid axis: step 0 of each image zeroes that
+    # image's accumulator block before any votes land in it.
+    @pl.when(pl.program_id(1) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
     a = a_ref[...].reshape(-1)
     r = r_ref[...].reshape(-1)
-    o_ref[...] += _vote_matmul(r, a, levels, copies)
+    o_ref[0, :, :] += _vote_matmul(r, a, levels, copies)
 
 
 @functools.partial(
@@ -100,39 +108,51 @@ def glcm_vote_pallas(
     copies: int = DEFAULT_COPIES,
     interpret: bool = False,
 ) -> jax.Array:
-    """Vote a flat (assoc, ref) pair stream into an (L, L) GLCM (int32).
+    """Vote (assoc, ref) pair streams into GLCMs (int32).
 
-    Inputs are 1-D int32 of equal length; entries of -1 are padding and do
-    not vote. The stream is padded to a chunk multiple internally.
+    Inputs are int32 of equal shape — either 1-D ``(N,)`` (one stream →
+    ``(L, L)``) or 2-D ``(B, N)`` (one stream per image → ``(B, L, L)``,
+    computed in a single kernel launch over a ``(B, steps)`` grid). Entries
+    of -1 are padding and do not vote. Streams are padded to a chunk
+    multiple internally.
     """
-    if assoc.shape != ref.shape or assoc.ndim != 1:
-        raise ValueError(f"pair streams must be equal 1-D, got {assoc.shape} vs {ref.shape}")
+    if assoc.shape != ref.shape or assoc.ndim not in (1, 2):
+        raise ValueError(
+            f"pair streams must be equal 1-D or 2-D, got {assoc.shape} vs {ref.shape}"
+        )
     if chunk % copies:
         raise ValueError(f"chunk ({chunk}) must be divisible by copies ({copies})")
-    n = assoc.shape[0]
+    batched = assoc.ndim == 2
+    a = assoc.astype(jnp.int32).reshape(-1 if not batched else (assoc.shape[0], -1))
+    r = ref.astype(jnp.int32).reshape(a.shape)
+    if not batched:
+        a = a[None, :]
+        r = r[None, :]
+    b, n = a.shape
     pad = (-n) % chunk
-    a = jnp.pad(assoc.astype(jnp.int32), (0, pad), constant_values=-1)
-    r = jnp.pad(ref.astype(jnp.int32), (0, pad), constant_values=-1)
-    steps = a.shape[0] // chunk
-    a = a.reshape(steps, chunk)
-    r = r.reshape(steps, chunk)
+    a = jnp.pad(a, ((0, 0), (0, pad)), constant_values=-1)
+    r = jnp.pad(r, ((0, 0), (0, pad)), constant_values=-1)
+    steps = a.shape[1] // chunk
+    a = a.reshape(b, steps, chunk)
+    r = r.reshape(b, steps, chunk)
 
-    grid = (steps,)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_vote_kernel, levels=levels, copies=copies),
-        grid=grid,
+        grid=(b, steps),
         in_specs=[
-            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
-            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, i: (bi, i, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, i: (bi, i, 0)),
         ],
-        out_specs=pl.BlockSpec((levels, levels), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((levels, levels), jnp.int32),
+        out_specs=pl.BlockSpec((1, levels, levels), lambda bi, i: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, levels, levels), jnp.int32),
         interpret=interpret,
     )(a, r)
+    return out if batched else out[0]
 
 
 # ---------------------------------------------------------------------------
-# Kernel 2: fused tiled image kernel — multi-offset, halo via next-tile Ref
+# Kernel 2: fused tiled image kernel — multi-offset, halo via next-tile Ref,
+# batch of images as the leading grid axis
 # ---------------------------------------------------------------------------
 
 def _fused_kernel(
@@ -147,7 +167,7 @@ def _fused_kernel(
     width: int,
     height: int,
 ):
-    pid = pl.program_id(0)
+    pid = pl.program_id(1)  # row-tile step within the current image
 
     @pl.when(pid == 0)
     def _init():
@@ -176,7 +196,7 @@ def _fused_kernel(
         row_ok = grow + dy < height
         r_flat = jnp.where(col_ok & row_ok, shifted, -1).reshape(-1)
         sub = _vote_matmul(r_flat, a_flat, levels, copies)
-        o_ref[k, :, :] += sub
+        o_ref[0, k, :, :] += sub
 
 
 @functools.partial(
@@ -192,28 +212,40 @@ def glcm_fused_pallas(
     copies: int = 1,
     interpret: bool = False,
 ) -> jax.Array:
-    """One pass over a quantized image → (n_offsets, L, L) GLCMs (int32).
+    """One pass over quantized image(s) → multi-offset GLCMs (int32).
+
+    ``img`` is (H, W) → (n_offsets, L, L), or (B, H, W) → (B, n_offsets,
+    L, L); the batch is the leading grid axis, so all B images are processed
+    by ONE kernel launch with the per-image accumulator selected by the
+    output ``index_map``.
 
     ``offsets`` are (dy, dx) pixel offsets (see ``kernels.ref.glcm_offsets``);
     every dy must satisfy 0 <= dy <= tile_h so the halo fits in the next row
     tile. Image height is padded to a tile multiple (padded rows masked).
     The full image width is kept resident per tile: the VMEM working set is
     2·tile_h·W·4B (tiles) + tile_h·W·L·1B (one-hot) + n_off·L²·4B — callers
-    should keep ``tile_h * W ≲ 256K`` elements.
+    should keep ``tile_h * W ≲ 256K`` elements (independent of B: the batch
+    axis only advances the DMA source, never the working set).
     """
-    h, w = img.shape
+    if img.ndim not in (2, 3):
+        raise ValueError(f"expected (H, W) or (B, H, W) image, got {img.shape}")
+    batched = img.ndim == 3
+    h, w = img.shape[-2:]
     for dy, dx in offsets:
         if not (0 <= dy <= tile_h):
             raise ValueError(f"dy={dy} must be in [0, tile_h={tile_h}]")
         if abs(dx) >= w:
             raise ValueError(f"|dx|={abs(dx)} must be < width={w}")
+    imgs = img.astype(jnp.int32)
+    if not batched:
+        imgs = imgs[None]
     pad_h = (-h) % tile_h
-    imgp = jnp.pad(img.astype(jnp.int32), ((0, pad_h), (0, 0)), constant_values=-1)
-    hp = imgp.shape[0]
+    imgp = jnp.pad(imgs, ((0, 0), (0, pad_h), (0, 0)), constant_values=-1)
+    b, hp, _ = imgp.shape
     steps = hp // tile_h
     n_off = len(offsets)
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(
             _fused_kernel,
             levels=levels,
@@ -223,14 +255,20 @@ def glcm_fused_pallas(
             width=w,
             height=h,
         ),
-        grid=(steps,),
+        grid=(b, steps),
         in_specs=[
-            pl.BlockSpec((tile_h, w), lambda i: (i, 0)),
-            # Halo: the NEXT row tile (clamped at the bottom; the clamp is
-            # safe because rows >= height are masked in-kernel).
-            pl.BlockSpec((tile_h, w), lambda i: (jnp.minimum(i + 1, steps - 1), 0)),
+            pl.BlockSpec((1, tile_h, w), lambda bi, i: (bi, i, 0)),
+            # Halo: the NEXT row tile of the SAME image (clamped at the
+            # bottom; the clamp is safe because rows >= height are masked
+            # in-kernel).
+            pl.BlockSpec(
+                (1, tile_h, w), lambda bi, i: (bi, jnp.minimum(i + 1, steps - 1), 0)
+            ),
         ],
-        out_specs=pl.BlockSpec((n_off, levels, levels), lambda i: (0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_off, levels, levels), jnp.int32),
+        out_specs=pl.BlockSpec(
+            (1, n_off, levels, levels), lambda bi, i: (bi, 0, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, n_off, levels, levels), jnp.int32),
         interpret=interpret,
     )(imgp, imgp)
+    return out if batched else out[0]

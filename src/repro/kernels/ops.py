@@ -52,15 +52,20 @@ def glcm_pallas(
     copies: int = DEFAULT_COPIES,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """GLCM of a quantized 2-D image via the pair-stream voting kernel.
+    """GLCM of quantized image(s) via the pair-stream voting kernel.
 
     Pair extraction (paper Eq. (2) addressing) happens as fused XLA slices;
-    voting happens in the Pallas kernel. Returns (L, L) int32 counts.
+    voting happens in the Pallas kernel. ``img`` is (H, W) → (L, L) int32
+    counts, or (B, H, W) → (B, L, L) computed in one kernel launch over a
+    (B, steps) grid.
     """
+    if img.ndim not in (2, 3):
+        raise ValueError(f"expected (H, W) or (B, H, W) image, got {img.shape}")
     assoc, rf = _ref.pair_planes(img, d, theta)
+    lead = img.shape[:-2]
     return glcm_vote_pallas(
-        assoc.reshape(-1).astype(jnp.int32),
-        rf.reshape(-1).astype(jnp.int32),
+        assoc.reshape(lead + (-1,)).astype(jnp.int32),
+        rf.reshape(lead + (-1,)).astype(jnp.int32),
         levels=levels,
         chunk=chunk,
         copies=copies,
@@ -79,7 +84,9 @@ def glcm_pallas_multi(
 ) -> jax.Array:
     """Multi-offset GLCM in ONE image pass via the fused tiled kernel.
 
-    ``pairs`` are (d, theta) tuples; returns (len(pairs), L, L) int32.
+    ``pairs`` are (d, theta) tuples. ``img`` is (H, W) → (len(pairs), L, L)
+    int32, or a (B, H, W) stack → (B, len(pairs), L, L) — the batch rides
+    the kernel's leading grid axis, so the whole stack is one launch.
     ``tile_h`` defaults to max(8, largest dy) rounded up to 8.
     """
     offsets = tuple(_ref.glcm_offsets(d, t) for d, t in pairs)

@@ -64,20 +64,23 @@ def pair_planes(img: jax.Array, d: int, theta: int) -> tuple[jax.Array, jax.Arra
     ``(dy, dx)``. This is the paper's Eq. (2) addressing realized as XLA
     slices (which stand in for the halo ``Pad`` of Eq. (8)/(9) — a shifted
     view instead of an overlapping copy).
+
+    ``img`` is (H, W) or carries leading batch dims (..., H, W); the slicing
+    acts on the trailing two axes, so batches share one fused slice.
     """
-    if img.ndim != 2:
-        raise ValueError(f"expected 2-D image, got shape {img.shape}")
-    h, w = img.shape
+    if img.ndim < 2:
+        raise ValueError(f"expected (..., H, W) image, got shape {img.shape}")
+    h, w = img.shape[-2:]
     dy, dx = glcm_offsets(d, theta)
     if dy >= h or abs(dx) >= w:
         raise ValueError(f"offset ({dy},{dx}) exceeds image shape {img.shape}")
     ys = slice(0, h - dy)
     if dx >= 0:
-        assoc = img[ys, : w - dx]
-        ref = img[dy:, dx:]
+        assoc = img[..., ys, : w - dx]
+        ref = img[..., dy:, dx:]
     else:
-        assoc = img[ys, -dx:]
-        ref = img[dy:, : w + dx]
+        assoc = img[..., ys, -dx:]
+        ref = img[..., dy:, : w + dx]
     return assoc, ref
 
 

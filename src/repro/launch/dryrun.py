@@ -47,7 +47,7 @@ def _cell_costs(cfg, cell, mesh):
     """cost_analysis + collective bytes of one lowered cell (compiled)."""
     prog = build_cell(cfg, cell, mesh)
     compiled = lower_cell(prog, mesh).compile()
-    cost = compiled.cost_analysis()
+    cost = rl.cost_analysis_dict(compiled)
     coll = rl.collective_bytes(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)), coll)
@@ -107,7 +107,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, *, save: bool = True,
     if probes:
         flops, byts, coll = _probe_costs(cfg, cell, mesh)
     else:
-        cost = compiled.cost_analysis()
+        cost = rl.cost_analysis_dict(compiled)
         flops = float(cost.get("flops", 0.0))
         byts = float(cost.get("bytes accessed", 0.0))
         coll = rl.collective_bytes(compiled.as_text())

@@ -54,6 +54,16 @@ def _shape_bytes(shape_str: str) -> int:
     return total
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` across jax versions: 0.4.x returns a
+    one-element list of dicts (per partitioned module), newer jax returns
+    the dict directly. Always returns a flat dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def collective_bytes(hlo_text: str) -> dict[str, int]:
     """Sum output bytes of every collective op in (optimized) HLO text."""
     out: dict[str, int] = {c: 0 for c in _COLLECTIVES}

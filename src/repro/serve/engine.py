@@ -1,9 +1,16 @@
-"""Serving engine: batched prefill + decode with per-sequence state.
+"""Serving engines: LM generation and batched GLCM texture features.
 
-A deliberately small but real engine: continuous batch of ``max_batch``
-slots, greedy or temperature sampling, per-slot positions, EOS handling.
-Decode uses the model's cache API (full / ring / SSM states) — the same
-code path the dry-run lowers at (B=128, KV=32k).
+``Engine`` — a deliberately small but real LM engine: continuous batch of
+``max_batch`` slots, greedy or temperature sampling, per-slot positions, EOS
+handling. Decode uses the model's cache API (full / ring / SSM states) — the
+same code path the dry-run lowers at (B=128, KV=32k).
+
+``GLCMEngine`` — the paper workload as a service: single-image requests are
+coalesced into fixed (batch_size, H, W) stacks and computed by ONE batched
+dispatch per stack (for the Pallas fused scheme, one kernel launch for the
+whole batch — see ``kernels.glcm_kernel``). Fixed stack shape means exactly
+one compiled program serves all traffic; partial batches are padded and the
+padding results dropped.
 """
 
 from __future__ import annotations
@@ -79,3 +86,109 @@ def perplexity(cfg, params, tokens: np.ndarray) -> float:
     api = build_model(cfg)
     loss, metrics = jax.jit(api.loss)(params, {"tokens": jnp.asarray(tokens)})
     return float(jnp.exp(metrics["nll"]))
+
+
+# ---------------------------------------------------------------------------
+# GLCM texture-feature serving
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GLCMServeConfig:
+    levels: int = 32
+    image_shape: tuple[int, int] = (256, 256)
+    batch_size: int = 8
+    pairs: tuple[tuple[int, int], ...] = ((1, 0), (1, 45), (4, 0), (4, 45))
+    scheme: str = "auto"          # any repro.core.glcm scheme
+    features: bool = True         # Haralick-14 per offset; False → raw GLCMs
+    quantize: str | None = "uniform"
+
+
+class GLCMEngine:
+    """Request-coalescing texture-feature server.
+
+    ``submit(image)`` enqueues one (H, W) request and returns a ticket; a
+    full batch auto-dispatches. ``flush()`` forces dispatch of a partial
+    batch (padded to ``batch_size`` via ``core.pipeline.coalesce_images``,
+    padding results dropped). ``result(ticket)`` returns the request's
+    output exactly once (flushing if it is still queued); asking again, or
+    for a ticket that was never issued, raises. ``map(images)`` is the
+    batch-submit convenience used by benchmarks.
+
+    Per request: Haralick features (len(pairs), 14) when ``cfg.features``,
+    else the raw GLCM stack (len(pairs), L, L).
+
+    All requests must share ``cfg.image_shape`` so one XLA program (and one
+    Pallas launch per stack, for the fused scheme) serves every batch.
+    """
+
+    def __init__(self, cfg: GLCMServeConfig = GLCMServeConfig()):
+        from repro.core.glcm import glcm, glcm_features
+
+        self.cfg = cfg
+        if cfg.batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        if not cfg.pairs:
+            raise ValueError("cfg.pairs must name at least one (d, theta) offset")
+
+        if cfg.features:
+            fn = lambda stack: glcm_features(
+                stack, cfg.levels, cfg.pairs, scheme=cfg.scheme,
+                quantize=cfg.quantize)
+        else:
+            fn = lambda stack: jnp.stack(
+                [glcm(stack, cfg.levels, d, t, scheme=cfg.scheme,
+                      quantize=cfg.quantize) for d, t in cfg.pairs],
+                axis=-3)
+        self._fn = jax.jit(fn)
+        self._pending: list[tuple[int, np.ndarray]] = []
+        self._results: dict[int, np.ndarray] = {}
+        self._next_ticket = 0
+        self.batches_dispatched = 0
+        self.images_served = 0
+
+    def submit(self, image: np.ndarray) -> int:
+        image = np.asarray(image)
+        if image.shape != tuple(self.cfg.image_shape):
+            raise ValueError(
+                f"request shape {image.shape} != engine shape {self.cfg.image_shape}")
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append((ticket, image))
+        if len(self._pending) == self.cfg.batch_size:
+            self._dispatch()
+        return ticket
+
+    def flush(self) -> None:
+        if self._pending:
+            self._dispatch()
+
+    def result(self, ticket: int) -> np.ndarray:
+        if ticket not in self._results and any(
+                t == ticket for t, _ in self._pending):
+            self.flush()
+        if ticket not in self._results:
+            raise KeyError(
+                f"ticket {ticket} is unknown or its result was already retrieved")
+        return self._results.pop(ticket)
+
+    def map(self, images) -> np.ndarray:
+        """Submit many images, flush, and return results stacked in order."""
+        tickets = [self.submit(im) for im in images]
+        self.flush()
+        return np.stack([self.result(t) for t in tickets])
+
+    def _dispatch(self) -> None:
+        from repro.core.pipeline import coalesce_images
+
+        tickets = [t for t, _ in self._pending]
+        imgs = [im for _, im in self._pending]
+        self._pending = []
+        # Pad to the fixed stack shape — one compiled program for all
+        # traffic. len(imgs) <= batch_size here, so exactly one group.
+        (stack, k), = coalesce_images(imgs, self.cfg.batch_size)
+        out = np.asarray(self._fn(jnp.asarray(stack)))
+        for i, t in enumerate(tickets):
+            self._results[t] = out[i]
+        self.batches_dispatched += 1
+        self.images_served += k

@@ -1,6 +1,8 @@
 """Gradient compression (error feedback) + the §II.A conflict analyzer."""
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax

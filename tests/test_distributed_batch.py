@@ -1,0 +1,61 @@
+"""Batch-axis sharded GLCM (``glcm_sharded_batch``) — batch over one mesh
+axis, halo-exchange row sharding over the other; runs in a subprocess with 8
+forced host devices so the default test env stays at 1 (mirrors
+``test_distributed_glcm.py``)."""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core.distributed import glcm_sharded_batch
+    from repro.core.schemes import glcm_scatter
+    from repro.launch.mesh import make_host_mesh
+
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = make_host_mesh((4, 2), ("data", "model"))
+    rng = np.random.default_rng(0)
+    imgs = jnp.asarray(rng.integers(0, 8, size=(8, 64, 96)), jnp.int32)
+
+    for d, theta in [(1, 0), (1, 45), (4, 90), (2, 135)]:
+        want = np.asarray(glcm_scatter(imgs, 8, d, theta)).astype(np.int32)
+        # batch over 'data' + halo-exchange rows over 'model'
+        got = np.asarray(glcm_sharded_batch(imgs, 8, d, theta, mesh))
+        np.testing.assert_array_equal(got, want), (d, theta)
+        # batch-only sharding (whole images per device)
+        got2 = np.asarray(
+            glcm_sharded_batch(imgs, 8, d, theta, mesh, row_axis=None))
+        np.testing.assert_array_equal(got2, want), (d, theta, "batch-only")
+
+    # error paths: indivisible batch / oversized halo
+    try:
+        glcm_sharded_batch(imgs[:3], 8, 1, 0, mesh)
+        raise SystemExit("expected indivisible-batch ValueError")
+    except ValueError:
+        pass
+    print("DISTRIBUTED-BATCH-OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_batch_glcm_8_devices():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"},
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "DISTRIBUTED-BATCH-OK" in proc.stdout

@@ -18,10 +18,10 @@ SCRIPT = textwrap.dedent(
     import numpy as np
     from repro.core.distributed import glcm_sharded, glcm_auto_sharded
     from repro.core.schemes import glcm_scatter
+    from repro.launch.mesh import make_host_mesh
 
     assert len(jax.devices()) == 8, jax.devices()
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_host_mesh((4, 2), ("data", "model"))
     rng = np.random.default_rng(0)
     img = jnp.asarray(rng.integers(0, 8, size=(64, 96)), jnp.int32)
 

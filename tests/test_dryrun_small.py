@@ -22,7 +22,7 @@ SCRIPT = textwrap.dedent(
     from repro.configs.shapes import ShapeCell
     from repro.launch.mesh import make_host_mesh
     from repro.launch.steps import build_cell, lower_cell
-    from repro.launch.roofline import collective_bytes
+    from repro.launch.roofline import collective_bytes, cost_analysis_dict
 
     assert len(jax.devices()) == 8
     mesh = make_host_mesh((4, 2), ("data", "model"))
@@ -36,7 +36,7 @@ SCRIPT = textwrap.dedent(
         for cell in cells:
             prog = build_cell(cfg, cell, mesh)
             compiled = lower_cell(prog, mesh).compile()
-            cost = compiled.cost_analysis()
+            cost = cost_analysis_dict(compiled)
             assert float(cost.get("flops", 0)) > 0, (arch, cell.name)
             mem = compiled.memory_analysis()
             assert mem.temp_size_in_bytes >= 0

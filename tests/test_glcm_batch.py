@@ -1,0 +1,218 @@
+"""Batched (B, H, W) GLCM paths: every scheme must match a stacked loop of
+single-image GLCMs bit-exactly, the Pallas kernels must take the batch as a
+grid axis (one launch), and the batched serving/pipeline layers must be
+invisible to callers (same per-image results, any batch size)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.glcm import glcm, glcm_features
+from repro.core.pipeline import coalesce_images, glcm_feature_stream
+from repro.core.schemes import glcm_blocked, glcm_multi, glcm_onehot, glcm_scatter
+from repro.kernels.glcm_kernel import glcm_fused_pallas, glcm_vote_pallas
+from repro.serve.engine import GLCMEngine, GLCMServeConfig
+
+from conftest import brute_force_glcm
+
+SCHEMES = ("scatter", "onehot", "blocked", "pallas", "pallas_fused")
+
+
+@pytest.fixture
+def stack(rng):
+    return jnp.asarray(rng.integers(0, 16, size=(5, 32, 48)), jnp.int32)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("d,theta", [(1, 0), (1, 45), (2, 90), (1, 135)])
+def test_batched_equals_stacked_loop(stack, scheme, d, theta):
+    levels = 16
+    got = np.asarray(glcm(stack, levels, d, theta, scheme=scheme))
+    want = np.stack(
+        [np.asarray(glcm(stack[i], levels, d, theta, scheme=scheme))
+         for i in range(stack.shape[0])]
+    )
+    assert got.shape == (stack.shape[0], levels, levels)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_batched_matches_brute_force(stack, scheme):
+    levels = 16
+    got = np.asarray(glcm(stack, levels, 1, 45, scheme=scheme))
+    for i in range(stack.shape[0]):
+        want = brute_force_glcm(np.asarray(stack[i]), levels, 1, 45)
+        np.testing.assert_array_equal(got[i], want)
+
+
+def test_acceptance_shape_8_64_64(rng):
+    """The PR acceptance criterion, verbatim: (8, 64, 64) → (8, L, L),
+    bit-exact vs the stacked loop for every scheme."""
+    imgs = jnp.asarray(rng.integers(0, 32, size=(8, 64, 64)), jnp.int32)
+    for scheme in SCHEMES:
+        got = np.asarray(glcm(imgs, 32, scheme=scheme))
+        want = np.stack(
+            [np.asarray(glcm(imgs[i], 32, scheme=scheme)) for i in range(8)]
+        )
+        assert got.shape == (8, 32, 32)
+        np.testing.assert_array_equal(got, want, err_msg=scheme)
+
+
+def test_batched_symmetric_normalize(stack):
+    levels = 16
+    g = np.asarray(glcm(stack, levels, 1, 0, scheme="onehot", symmetric=True))
+    np.testing.assert_allclose(g, np.swapaxes(g, -1, -2))
+    gn = np.asarray(glcm(stack, levels, 1, 0, scheme="onehot", normalize=True))
+    np.testing.assert_allclose(gn.sum(axis=(-2, -1)), 1.0, rtol=1e-6)
+
+
+def test_batched_features_all_schemes(rng):
+    imgs = jnp.asarray(rng.uniform(0, 255, (4, 32, 32)), jnp.float32)
+    for scheme in ("onehot", "pallas_fused"):
+        got = np.asarray(glcm_features(imgs, 8, scheme=scheme))
+        want = np.stack(
+            [np.asarray(glcm_features(imgs[i], 8, scheme=scheme)) for i in range(4)]
+        )
+        assert got.shape == (4, 4, 14)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6, err_msg=scheme)
+
+
+def test_batched_schemes_direct(stack):
+    """The schemes module itself (not just the glcm() wrapper) is batch-aware."""
+    levels = 16
+    for fn in (glcm_scatter, glcm_onehot, glcm_blocked):
+        got = np.asarray(fn(stack, levels, 1, 90))
+        want = np.stack(
+            [np.asarray(fn(stack[i], levels, 1, 90)) for i in range(stack.shape[0])]
+        )
+        np.testing.assert_array_equal(got, want, err_msg=fn.__name__)
+    multi = np.asarray(glcm_multi(stack, levels))
+    assert multi.shape == (stack.shape[0], 4, levels, levels)
+
+
+def test_batched_vote_kernel(rng):
+    levels = 8
+    a = rng.integers(0, levels, (3, 700)).astype(np.int32)
+    r = rng.integers(0, levels, (3, 700)).astype(np.int32)
+    got = np.asarray(
+        glcm_vote_pallas(jnp.asarray(a), jnp.asarray(r), levels=levels,
+                         chunk=256, interpret=True)
+    )
+    assert got.shape == (3, levels, levels)
+    for i in range(3):
+        want = np.zeros((levels, levels), np.int64)
+        np.add.at(want, (r[i], a[i]), 1)
+        np.testing.assert_array_equal(got[i], want)
+
+
+def test_batched_fused_kernel_one_launch_grid(rng):
+    """The fused kernel must accept a (B, H, W) stack directly (the batch is
+    a grid axis — one pallas_call for the whole stack) and agree with the
+    per-image calls."""
+    levels = 8
+    imgs = rng.integers(0, levels, size=(4, 24, 40)).astype(np.int32)
+    offsets = ((1, 0), (1, -1), (0, 1))
+    got = np.asarray(
+        glcm_fused_pallas(jnp.asarray(imgs), levels=levels, offsets=offsets,
+                          tile_h=8, interpret=True)
+    )
+    assert got.shape == (4, 3, levels, levels)
+    for i in range(4):
+        want = np.asarray(
+            glcm_fused_pallas(jnp.asarray(imgs[i]), levels=levels,
+                              offsets=offsets, tile_h=8, interpret=True)
+        )
+        np.testing.assert_array_equal(got[i], want)
+
+
+def test_bad_batch_ndim():
+    with pytest.raises(ValueError):
+        glcm(jnp.zeros((2, 3, 4, 4), jnp.int32), 8)
+    with pytest.raises(ValueError):
+        glcm_onehot(jnp.zeros((4,), jnp.int32), 8, 1, 0)
+
+
+# ---------------------------------------------------------------------------
+# Request coalescing (serve) and batched streaming (pipeline)
+# ---------------------------------------------------------------------------
+
+
+def _req_images(n, seed=0, shape=(32, 32)):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 256, shape).astype(np.float32) for _ in range(n)]
+
+
+def test_engine_coalesces_into_fixed_batches():
+    imgs = _req_images(11)
+    eng = GLCMEngine(GLCMServeConfig(levels=8, image_shape=(32, 32), batch_size=4))
+    out = eng.map(imgs)
+    assert out.shape == (11, 4, 14)
+    assert eng.batches_dispatched == 3     # ceil(11 / 4): 4 + 4 + 3(padded)
+    assert eng.images_served == 11
+    for i, im in enumerate(imgs):
+        want = np.asarray(glcm_features(jnp.asarray(im), 8))
+        np.testing.assert_allclose(out[i], want, rtol=1e-5, atol=1e-6)
+
+
+def test_engine_ticket_protocol_and_partial_flush():
+    imgs = _req_images(2, seed=1)
+    eng = GLCMEngine(GLCMServeConfig(levels=8, image_shape=(32, 32), batch_size=4))
+    t0, t1 = eng.submit(imgs[0]), eng.submit(imgs[1])
+    assert eng.batches_dispatched == 0     # below batch_size: still queued
+    r1 = eng.result(t1)                    # forces the flush
+    r0 = eng.result(t0)
+    assert eng.batches_dispatched == 1
+    np.testing.assert_allclose(
+        r0, np.asarray(glcm_features(jnp.asarray(imgs[0]), 8)),
+        rtol=1e-5, atol=1e-6)
+    assert r1.shape == (4, 14)
+
+
+def test_engine_rejects_wrong_shape():
+    eng = GLCMEngine(GLCMServeConfig(image_shape=(32, 32)))
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros((16, 16), np.float32))
+    with pytest.raises(ValueError):
+        GLCMEngine(GLCMServeConfig(pairs=()))
+
+
+def test_engine_raw_glcm_mode_returns_all_pairs():
+    imgs = _req_images(3, seed=2)
+    eng = GLCMEngine(GLCMServeConfig(levels=8, image_shape=(32, 32),
+                                     batch_size=2, features=False))
+    out = eng.map(imgs)
+    assert out.shape == (3, 4, 8, 8)      # every configured (d, θ) pair
+    for k, (d, t) in enumerate(eng.cfg.pairs):
+        want = np.asarray(glcm(jnp.asarray(imgs[0]), 8, d, t, quantize="uniform"))
+        np.testing.assert_allclose(out[0, k], want)
+
+
+def test_engine_result_is_one_shot():
+    eng = GLCMEngine(GLCMServeConfig(levels=8, image_shape=(32, 32), batch_size=2))
+    t = eng.submit(_req_images(1, seed=4)[0])
+    assert eng.result(t).shape == (4, 14)
+    with pytest.raises(KeyError, match="already retrieved"):
+        eng.result(t)
+    with pytest.raises(KeyError, match="unknown"):
+        eng.result(12345)
+
+
+def test_coalesce_images_padding():
+    groups = list(coalesce_images(_req_images(5), 3))
+    assert [k for _, k in groups] == [3, 2]
+    assert all(stack.shape == (3, 32, 32) for stack, _ in groups)
+    # padding repeats the last real image
+    np.testing.assert_array_equal(groups[1][0][1], groups[1][0][2])
+
+
+@pytest.mark.parametrize("batch_size", [1, 2, 4, 8])
+def test_feature_stream_batch_invariance(batch_size):
+    """batch_size must change only the dispatch granularity, never results,
+    their order, or their count."""
+    imgs = _req_images(7, seed=3)
+    base = [np.asarray(f) for f in glcm_feature_stream(imgs, levels=8)]
+    got = [np.asarray(f)
+           for f in glcm_feature_stream(imgs, levels=8, batch_size=batch_size)]
+    assert len(got) == len(imgs)
+    for b, g in zip(base, got):
+        np.testing.assert_allclose(g, b, rtol=1e-6)

@@ -1,6 +1,8 @@
 """Hypothesis property tests over the system's invariants."""
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax.numpy as jnp
