@@ -47,4 +47,9 @@ def run() -> None:
                 f"batch_throughput/{scheme}/B{b}",
                 us,
                 f"images_per_sec={ips:.1f}_x{ips / base_ips:.2f}",
+                scheme=scheme,
+                batch=b,
+                resolution=SIZE,
+                images_per_sec=round(ips, 1),
+                speedup_vs_b1=ips / base_ips,
             )

@@ -1,5 +1,11 @@
-"""Benchmark utilities: stable timing + the required CSV output format
-(``name,us_per_call,derived``)."""
+"""Benchmark utilities: stable timing, the required CSV output format
+(``name,us_per_call,derived``), and machine-readable result collection.
+
+Every ``emit()`` both prints the CSV line AND appends a structured row to
+``RESULTS`` (extra keyword fields ride along), which ``benchmarks.run``
+serializes to ``BENCH_glcm.json`` so the perf trajectory is tracked across
+PRs instead of living only in CI logs.
+"""
 
 from __future__ import annotations
 
@@ -8,6 +14,9 @@ from collections.abc import Callable
 
 import jax
 import numpy as np
+
+# Structured rows collected across a benchmark run (see benchmarks/run.py).
+RESULTS: list[dict] = []
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -22,5 +31,13 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     return float(np.median(times) * 1e6)
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
+def emit(name: str, us_per_call: float, derived: str = "", **extra) -> None:
+    """Print one CSV row and record it (plus structured ``extra`` fields)."""
+    RESULTS.append(
+        {"name": name, "us_per_call": float(us_per_call), "derived": derived, **extra}
+    )
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def reset_results() -> None:
+    RESULTS.clear()

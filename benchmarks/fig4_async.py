@@ -8,7 +8,6 @@ buffer) over an image stream and report the overlap gain.
 
 import time
 
-import numpy as np
 
 from benchmarks.common import emit
 from repro.core.pipeline import glcm_feature_stream

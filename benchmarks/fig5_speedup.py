@@ -52,8 +52,13 @@ def run() -> None:
         us_oh = time_fn(f_oh, img)
         gflops = 2 * pairs * LEVELS * LEVELS / (us_oh * 1e-6) / 1e9
 
-        emit(f"fig5/{size}x{size}/serial_cpu", us_serial, "")
+        emit(f"fig5/{size}x{size}/serial_cpu", us_serial, "",
+             size=f"{size}x{size}", scheme="serial_cpu")
         emit(f"fig5/{size}x{size}/xla_scatter", us_scat,
-             f"speedup={us_serial/max(us_scat,1e-9):.1f}x_paper≈50x")
+             f"speedup={us_serial/max(us_scat,1e-9):.1f}x_paper≈50x",
+             size=f"{size}x{size}", scheme="scatter",
+             speedup_vs_serial=us_serial / max(us_scat, 1e-9))
         emit(f"fig5/{size}x{size}/onehot_mxu_form", us_oh,
-             f"achieved={gflops:.1f}GFLOPs_tpu_peak=197000")
+             f"achieved={gflops:.1f}GFLOPs_tpu_peak=197000",
+             size=f"{size}x{size}", scheme="onehot",
+             achieved_gflops=round(gflops, 1))

@@ -1,32 +1,88 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only table2]
+    PYTHONPATH=src python -m benchmarks.run [--only table2] [--out BENCH_glcm.json]
 
-Output format: ``name,us_per_call,derived`` CSV lines.
+Output: ``name,us_per_call,derived`` CSV lines on stdout (unchanged), plus a
+machine-readable ``BENCH_glcm.json`` capturing every structured row
+(scheme × resolution × batch timings and the derived speedup ratios) so the
+perf trajectory can be compared across PRs. ``--out ''`` disables the file.
 """
 
 import argparse
+import json
 import sys
 import time
 
+import jax
+
+from benchmarks import common
+
 MODULES = ("table2_scheme1", "table3_scheme2", "table4_transfer",
            "fig4_async", "fig5_speedup", "moe_dispatch", "batch_throughput")
+
+
+def _batch_speedups(rows: list[dict]) -> dict:
+    """scheme → {B: speedup_vs_B1} from batch_throughput's structured rows."""
+    out: dict = {}
+    for r in rows:
+        if "speedup_vs_b1" in r:
+            out.setdefault(r["scheme"], {})[f"B{r['batch']}"] = round(
+                r["speedup_vs_b1"], 3
+            )
+    return out
+
+
+def _serial_speedups(rows: list[dict]) -> dict:
+    """resolution → accelerated-vs-serial speedup from fig5's rows."""
+    return {
+        r["size"]: round(r["speedup_vs_serial"], 2)
+        for r in rows
+        if "speedup_vs_serial" in r
+    }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on module names")
+    ap.add_argument("--out", default="BENCH_glcm.json",
+                    help="machine-readable results path ('' disables)")
     args = ap.parse_args()
 
+    common.reset_results()
     print("name,us_per_call,derived")
+    modules_run: dict = {}
     for mod_name in MODULES:
         if args.only and args.only not in mod_name:
             continue
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        before = len(common.RESULTS)
         t0 = time.time()
         mod.run()
-        print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        dt = time.time() - t0
+        modules_run[mod_name] = {
+            "seconds": round(dt, 2),
+            "rows": len(common.RESULTS) - before,
+        }
+        print(f"# {mod_name} done in {dt:.1f}s", file=sys.stderr)
+
+    if args.out:
+        payload = {
+            "benchmark": "glcm",
+            "unix_time": int(time.time()),
+            "jax_version": jax.__version__,
+            "jax_backend": jax.default_backend(),
+            "modules": modules_run,
+            "speedups": {
+                "batch_vs_b1": _batch_speedups(common.RESULTS),
+                "vs_serial_cpu": _serial_speedups(common.RESULTS),
+            },
+            "rows": common.RESULTS,
+        }
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1)
+            f.write("\n")
+        print(f"# wrote {len(common.RESULTS)} rows to {args.out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -10,7 +10,6 @@ image regimes and reports the content-sensitivity ratio (derived column):
 scheme 2's ratio ≈ 1.0 is the reproduction of the paper's fix.
 """
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +33,6 @@ def run() -> None:
                                 ("scheme2_onehot", glcm_onehot)):
             times = {}
             for img_name, q in quant.items():
-                jit_fn = jax.jit(functools.partial(fn, levels=levels, d=1, theta=0))
                 for d, theta in ((1, 0), (1, 45), (4, 0), (4, 45)):
                     f = jax.jit(lambda x, _fn=fn, _d=d, _t=theta:
                                 _fn(x, levels, _d, _t))

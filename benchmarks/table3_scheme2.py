@@ -24,7 +24,9 @@ def run() -> None:
             f = jax.jit(lambda x: glcm_onehot(x, levels, 1, 0))
             us = time_fn(f, img)
             emit(f"table3/L{levels}/{size}x{size}", us,
-                 f"ns_per_pixel={us*1e3/(size*size):.3f}")
+                 f"ns_per_pixel={us*1e3/(size*size):.3f}",
+                 scheme="onehot", levels=levels, resolution=size,
+                 ns_per_pixel=round(us * 1e3 / (size * size), 3))
         # d/θ insensitivity at one size (paper: ±5% across the grid)
         img = jnp.asarray(smooth_texture(1024), jnp.int32) // (256 // levels)
         grid_us = []

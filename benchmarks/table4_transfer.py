@@ -7,7 +7,6 @@ the transfer fraction (derived) — the quantity Scheme 3 hides.
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn

@@ -1,22 +1,45 @@
 """repro.core — the paper's contribution (GLCM computation) as a library.
 
+Execution layer (spec → plan → backend):
+  spec        GLCMSpec, the frozen description of one GLCM workload
+  backends    the scheme registry (scatter / onehot / blocked / pallas /
+              pallas_fused) — the ONLY place scheme names are dispatched
+  plan        compile_plan: spec + shape → one cached, jitted program
+
 Modules:
-  glcm        public API (scheme dispatch, quantize, features)
+  glcm        public API (thin wrappers building specs, executing plans)
   schemes     paper Schemes 1–3 in jnp (scatter / one-hot MXU / blocked+halo)
   haralick    the 14 Haralick texture features
   quantize    gray-level quantization (uniform / equalized)
-  distributed shard_map GLCM over a mesh (Scheme 3 at pod scale)
+  distributed shard_map GLCM over a mesh (Scheme 3 at pod scale; per-shard
+              compute resolved through the plan layer)
   pipeline    host-side streamed, double-buffered processing (CUDA streams
               analogue)
 """
 
-from repro.core import distributed, haralick, pipeline, quantize, schemes
+from repro.core import (
+    backends,
+    distributed,
+    haralick,
+    pipeline,
+    plan,
+    quantize,
+    schemes,
+    spec,
+)
 from repro.core.glcm import PAPER_PAIRS, glcm, glcm_features
+from repro.core.plan import compile_plan
+from repro.core.spec import GLCMSpec
 
 __all__ = [
     "glcm",
     "glcm_features",
+    "GLCMSpec",
+    "compile_plan",
     "PAPER_PAIRS",
+    "spec",
+    "plan",
+    "backends",
     "schemes",
     "haralick",
     "quantize",

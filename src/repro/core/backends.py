@@ -1,0 +1,225 @@
+"""The scheme registry — every GLCM execution strategy behind ONE contract.
+
+Each backend implements
+
+    compute(img_batch, spec) -> (B, n_pairs, L, L) float32 counts
+
+where ``img_batch`` is an already-quantized (B, H, W) int32 stack and
+``spec`` is a resolved :class:`repro.core.spec.GLCMSpec` (no "auto").
+Quantization, symmetric/normalize post-processing and un/batching are the
+*plan's* job (``core.plan.compile_plan``) — backends only count votes, so a
+new strategy is one ``register()`` call, not three ``if/elif`` edits.
+
+Capabilities declare what each strategy can do (multi-offset fusion in a
+single device pass, batch carried as a kernel grid axis, TPU-targeted
+compilation, sentinel-masked partials for halo-exchange sharding) so the
+"auto" resolver and the distributed layer can pick by *capability* instead
+of by name.
+
+Scheme-name dispatch lives HERE and only here: ``glcm``/``glcm_features``,
+``serve.GLCMEngine``, ``core.pipeline.glcm_feature_stream`` and
+``core.distributed.glcm_sharded*`` all resolve through the registry via
+``compile_plan``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schemes import glcm_blocked, glcm_multi, glcm_scatter
+from repro.core.spec import GLCMSpec
+from repro.kernels import ops as kops
+
+__all__ = [
+    "Backend",
+    "Capabilities",
+    "available_backends",
+    "get_backend",
+    "register",
+    "resolve_scheme",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Capabilities:
+    """What a backend's strategy supports (declared, not probed)."""
+
+    multi_offset_fused: bool = False  # all (d, θ) offsets in ONE device pass
+    batch_grid: bool = False          # batch rides a kernel grid axis (one launch)
+    tpu_only: bool = False            # compiled target is TPU (interpret elsewhere)
+    sharded_partial: bool = False     # supplies sentinel-masked partials for
+    #                                   halo-exchange sharding (distributed.*)
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One registered execution strategy.
+
+    ``validate(spec, shape)`` (optional) rejects spec/shape combinations the
+    strategy cannot serve (e.g. blocked with a non-divisible height) BEFORE
+    tracing.  ``local_partial(ext, levels, dy, dx, local_h)`` (optional, for
+    ``caps.sharded_partial``) computes the partial GLCM of a halo-extended
+    row shard with -1 sentinels dropped — the per-shard hook the distributed
+    layer consumes.
+    """
+
+    name: str
+    compute: Callable[[jax.Array, GLCMSpec], jax.Array]
+    caps: Capabilities = Capabilities()
+    validate: Callable[[GLCMSpec, tuple[int, ...]], None] | None = None
+    local_partial: Callable[..., jax.Array] | None = None
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register(backend: Backend) -> Backend:
+    """Add ``backend`` to the registry; its name becomes a scheme name."""
+    if backend.name in _REGISTRY:
+        raise ValueError(f"backend {backend.name!r} is already registered")
+    if backend.name == "auto":
+        raise ValueError('"auto" is reserved for scheme resolution')
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheme {name!r}; available: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_scheme(spec: GLCMSpec, *, require: tuple[str, ...] = ()) -> str:
+    """Resolve ``spec.scheme`` (possibly "auto") to a registered backend name.
+
+    "auto" picks the production path for the running jax backend: on TPU the
+    Pallas kernels (the fused multi-offset kernel when the spec asks for more
+    than one offset, else the pair-stream voting kernel), elsewhere the
+    conflict-free one-hot MXU scheme.  ``require`` names :class:`Capabilities`
+    fields the resolved backend must declare — "auto" then picks the first
+    capable backend, and an explicitly named scheme that lacks one raises.
+    """
+    if spec.scheme != "auto":
+        get_backend(spec.scheme)  # existence check; capability check in plan
+        return spec.scheme
+    if require:
+        for name in available_backends():
+            caps = _REGISTRY[name].caps
+            if all(getattr(caps, cap) for cap in require):
+                return name
+        raise ValueError(f'no registered backend has capabilities {require!r}')
+    if jax.default_backend() == "tpu":
+        return "pallas_fused" if spec.n_pairs > 1 else "pallas"
+    return "onehot"
+
+
+# ---------------------------------------------------------------------------
+# The five built-in strategies
+# ---------------------------------------------------------------------------
+
+
+def _scatter_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
+    # One traced program: the per-pair scatters fuse under the plan's jit.
+    return jnp.stack(
+        [glcm_scatter(img, spec.levels, d, t) for d, t in spec.pairs], axis=-3
+    )
+
+
+def _onehot_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
+    # glcm_multi amortizes the image read across offsets and batches the
+    # L×L matmuls — one program per request regardless of len(pairs).
+    return glcm_multi(img, spec.levels, spec.pairs, copies=spec.copies)
+
+
+def _onehot_local_partial(ext, levels, dy, dx, local_h):
+    from repro.core.distributed import local_partial_glcm  # late: no cycle
+
+    return local_partial_glcm(ext, levels, dy, dx, local_h)
+
+
+def _blocked_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
+    return jnp.stack(
+        [
+            glcm_blocked(img, spec.levels, d, t, num_blocks=spec.num_blocks)
+            for d, t in spec.pairs
+        ],
+        axis=-3,
+    )
+
+
+def _blocked_validate(spec: GLCMSpec, shape: tuple[int, ...]) -> None:
+    h = shape[-2]
+    if h % spec.num_blocks:
+        raise ValueError(
+            f"image height {h} not divisible by num_blocks={spec.num_blocks}"
+        )
+    bh = h // spec.num_blocks
+    for (d, t), (dy, _) in zip(spec.pairs, spec.offsets()):
+        if dy > bh:
+            raise ValueError(
+                f"halo dy={dy} of offset (d={d}, theta={t}) exceeds block height {bh}"
+            )
+
+
+def _pallas_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
+    return jnp.stack(
+        [
+            kops.glcm_pallas(img, spec.levels, d, t).astype(jnp.float32)
+            for d, t in spec.pairs
+        ],
+        axis=-3,
+    )
+
+
+def _pallas_fused_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
+    return kops.glcm_pallas_multi(img, spec.levels, spec.pairs).astype(jnp.float32)
+
+
+register(
+    Backend(
+        name="scatter",
+        compute=_scatter_compute,
+        caps=Capabilities(),  # the contention baseline: no fast-path claims
+    )
+)
+register(
+    Backend(
+        name="onehot",
+        compute=_onehot_compute,
+        caps=Capabilities(multi_offset_fused=True, sharded_partial=True),
+        local_partial=_onehot_local_partial,
+    )
+)
+register(
+    Backend(
+        name="blocked",
+        compute=_blocked_compute,
+        caps=Capabilities(),
+        validate=_blocked_validate,
+    )
+)
+register(
+    Backend(
+        name="pallas",
+        compute=_pallas_compute,
+        caps=Capabilities(batch_grid=True, tpu_only=True),
+    )
+)
+register(
+    Backend(
+        name="pallas_fused",
+        compute=_pallas_fused_compute,
+        caps=Capabilities(multi_offset_fused=True, batch_grid=True, tpu_only=True),
+    )
+)

@@ -26,12 +26,12 @@ each image reuse the same halo-exchange sharding over another.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.spec import GLCMSpec
 from repro.kernels.ref import glcm_offsets
 
 # jax >= 0.6 exposes shard_map at the top level; 0.4.x keeps it experimental.
@@ -45,6 +45,34 @@ __all__ = [
     "glcm_auto_sharded",
     "local_partial_glcm",
 ]
+
+
+def _shard_plan(levels, d, theta, spec, shape):
+    """Resolve the per-shard compute through the plan/backend layer.
+
+    Legacy scalar args build a single-offset spec; an explicit ``spec``
+    overrides them.  The returned plan's backend must declare the
+    ``sharded_partial`` capability (its sentinel-masked ``local_partial``
+    is the per-shard kernel); "auto" resolves to a capable backend.
+    Returns (plan, levels, (dy, dx)).
+    """
+    from repro.core.plan import compile_plan
+
+    if spec is None:
+        if levels is None or d is None or theta is None:
+            raise ValueError("pass either spec= or (levels, d, theta)")
+        spec = GLCMSpec(levels=levels, pairs=((d, theta),), scheme="auto")
+    else:
+        if levels is not None or d is not None or theta is not None:
+            raise ValueError("pass either spec= or (levels, d, theta), not both")
+        if spec.quantize is not None or spec.symmetric or spec.normalize:
+            raise ValueError(
+                "sharded GLCM expects pre-quantized images and returns raw "
+                "counts; quantize/symmetric/normalize must be unset in spec"
+            )
+    d, theta = spec.single_pair()  # sharded compute is single-offset
+    plan = compile_plan(spec, shape, require=("sharded_partial",))
+    return plan, plan.spec.levels, glcm_offsets(d, theta)
 
 
 def _onehot(v: jax.Array, levels: int) -> jax.Array:
@@ -78,19 +106,26 @@ def local_partial_glcm(
 
 def glcm_sharded(
     img: jax.Array,
-    levels: int,
-    d: int,
-    theta: int,
-    mesh: Mesh,
+    levels: int | None = None,
+    d: int | None = None,
+    theta: int | None = None,
+    mesh: Mesh = None,
     *,
     axis: str | tuple[str, ...] = "data",
+    spec: GLCMSpec | None = None,
 ) -> jax.Array:
     """Exact GLCM of an image sharded row-wise over ``axis`` of ``mesh``.
 
+    The per-shard partial compute is resolved through ``compile_plan`` (the
+    backend must declare ``sharded_partial``); pass ``spec=`` for the
+    spec-native API or the legacy ``(levels, d, theta)`` scalars.
     Returns the full (L, L) int32 GLCM, replicated on every device.
     """
+    if mesh is None:
+        raise ValueError("glcm_sharded requires a mesh")
     axes = (axis,) if isinstance(axis, str) else tuple(axis)
-    dy, dx = glcm_offsets(d, theta)
+    plan, levels, (dy, dx) = _shard_plan(levels, d, theta, spec, img.shape)
+    local_partial = plan.backend.local_partial
     h, w = img.shape
     n_shards = 1
     for a in axes:
@@ -118,7 +153,7 @@ def glcm_sharded(
         else:
             halo = jnp.zeros((0, w), img_shard.dtype)
         ext = jnp.concatenate([img_shard, halo], axis=0)
-        part = local_partial_glcm(ext.astype(jnp.int32), levels, dy, dx, local_h)
+        part = local_partial(ext.astype(jnp.int32), levels, dy, dx, local_h)
         return jax.lax.psum(part, flat_axis)
 
     spec_axes = axes if len(axes) > 1 else axes[0]
@@ -133,13 +168,14 @@ def glcm_sharded(
 
 def glcm_sharded_batch(
     imgs: jax.Array,
-    levels: int,
-    d: int,
-    theta: int,
-    mesh: Mesh,
+    levels: int | None = None,
+    d: int | None = None,
+    theta: int | None = None,
+    mesh: Mesh = None,
     *,
     batch_axis: str = "data",
     row_axis: str | None = "model",
+    spec: GLCMSpec | None = None,
 ) -> jax.Array:
     """Exact GLCMs of a (B, H, W) image stack sharded over the mesh.
 
@@ -156,7 +192,10 @@ def glcm_sharded_batch(
     """
     if imgs.ndim != 3:
         raise ValueError(f"expected (B, H, W) image stack, got {imgs.shape}")
-    dy, dx = glcm_offsets(d, theta)
+    if mesh is None:
+        raise ValueError("glcm_sharded_batch requires a mesh")
+    plan, levels, (dy, dx) = _shard_plan(levels, d, theta, spec, imgs.shape)
+    local_partial = plan.backend.local_partial
     b, h, w = imgs.shape
     n_batch = mesh.shape[batch_axis]
     if b % n_batch:
@@ -183,7 +222,7 @@ def glcm_sharded_batch(
             halo = jnp.full((shard.shape[0], dy, w), -1, shard.dtype)
         ext = jnp.concatenate([shard, halo], axis=1).astype(jnp.int32)
         part = jax.vmap(
-            lambda e: local_partial_glcm(e, levels, dy, dx, local_h)
+            lambda e: local_partial(e, levels, dy, dx, local_h)
         )(ext)
         if row_axis is not None:
             part = jax.lax.psum(part, row_axis)
@@ -200,20 +239,27 @@ def glcm_sharded_batch(
 
 def glcm_auto_sharded(
     img: jax.Array,
-    levels: int,
-    d: int,
-    theta: int,
-    mesh: Mesh,
+    levels: int | None = None,
+    d: int | None = None,
+    theta: int | None = None,
+    mesh: Mesh = None,
     *,
     axis: str = "data",
+    spec: GLCMSpec | None = None,
 ) -> jax.Array:
     """GSPMD-auto variant: express the one-hot voting matmul on the globally
     sharded image and let XLA partition the contraction (pair axis sharded →
     all-reduce of the (L, L) partials). Cross-validates ``glcm_sharded`` and
-    supplies the collective schedule the roofline reads."""
-    from repro.core.schemes import glcm_onehot
+    supplies the collective schedule the roofline reads.
 
+    The compute is resolved through the backend registry (same conflict-free
+    backend the halo-exchange path uses), applied to the globally-sharded
+    image so GSPMD inserts the reduction."""
+    if mesh is None:
+        raise ValueError("glcm_auto_sharded requires a mesh")
+    plan, levels, _ = _shard_plan(levels, d, theta, spec, img.shape)
     sharded = jax.lax.with_sharding_constraint(
         img, NamedSharding(mesh, P(axis, None))
     )
-    return glcm_onehot(sharded, levels, d, theta).astype(jnp.int32)
+    out = plan.backend.compute(sharded[None].astype(jnp.int32), plan.spec)
+    return out[0, 0].astype(jnp.int32)

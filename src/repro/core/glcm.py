@@ -1,4 +1,4 @@
-"""Public GLCM API — one entry point over every scheme/backends.
+"""Public GLCM API — thin wrappers over the spec → plan → backend layer.
 
     from repro.core import glcm
     P = glcm.glcm(img, levels=32, d=1, theta=45, scheme="pallas")
@@ -10,7 +10,16 @@ Schemes (see DESIGN.md §2 for the CUDA→TPU mapping):
   "blocked"       paper Scheme 3 single-device (halo'd row blocks, scanned)
   "pallas"        pair-stream Pallas voting kernel (production path)
   "pallas_fused"  fused tiled Pallas kernel (multi-offset, one image pass)
-  "auto"          "onehot" on CPU, "pallas" on TPU
+  "auto"          resolved by the registry: Pallas on TPU, "onehot" elsewhere
+
+Both entry points build a frozen :class:`repro.core.spec.GLCMSpec` and
+execute it through :func:`repro.core.plan.compile_plan` — one jitted program
+per (spec, shape), cached, with ALL scheme-name dispatch living in the
+``core.backends`` registry.  Spec-native callers can skip the keyword API:
+
+    spec = GLCMSpec(levels=32, pairs=PAPER_PAIRS, scheme="auto")
+    plan = compile_plan(spec, imgs.shape)       # same cache the wrappers hit
+    mats = plan(imgs)                           # (B, n_pairs, L, L)
 
 Batched API
 -----------
@@ -28,6 +37,11 @@ that turns per-image latency into serving throughput (see
 ``benchmarks/batch_throughput.py`` for images/sec vs batch size).
 Quantization is applied per image (each image's own value range), matching
 the single-image semantics exactly.
+
+Multi-offset is first-class for EVERY scheme: ``glcm_features`` compiles one
+program covering all ``pairs`` (the jnp schemes via the fused ``glcm_multi``,
+the Pallas fused kernel via one image pass) — never a Python loop of
+per-pair dispatches.
 """
 
 from __future__ import annotations
@@ -35,30 +49,14 @@ from __future__ import annotations
 from typing import Literal
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.haralick import haralick_features
-from repro.core.quantize import quantize_equalized, quantize_uniform
-from repro.core.schemes import PAPER_PAIRS, glcm_blocked, glcm_onehot, glcm_scatter
-from repro.kernels import ops as kops
+from repro.core.plan import compile_plan
+from repro.core.schemes import PAPER_PAIRS
+from repro.core.spec import GLCMSpec
 
-__all__ = ["glcm", "glcm_features", "Scheme", "PAPER_PAIRS"]
+__all__ = ["glcm", "glcm_features", "GLCMSpec", "compile_plan", "Scheme", "PAPER_PAIRS"]
 
 Scheme = Literal["scatter", "onehot", "blocked", "pallas", "pallas_fused", "auto"]
-
-
-def _maybe_quantize(image: jax.Array, levels: int, quantize: str | None) -> jax.Array:
-    if quantize is None:
-        return image.astype(jnp.int32)
-    if quantize == "uniform":
-        fn = lambda im: quantize_uniform(im, levels)
-    elif quantize == "equalized":
-        fn = lambda im: quantize_equalized(im, levels)
-    else:
-        raise ValueError(f"unknown quantize mode {quantize!r}")
-    # Per-image quantization: each image of a batch uses its OWN value range
-    # (identical to quantizing the images one at a time).
-    return jax.vmap(fn)(image) if image.ndim == 3 else fn(image)
 
 
 def _check_ndim(image: jax.Array) -> None:
@@ -87,29 +85,17 @@ def glcm(
     (vmap for the jnp schemes, a batch grid axis for the Pallas kernels).
     """
     _check_ndim(image)
-    img = _maybe_quantize(image, levels, quantize)
-    if scheme == "auto":
-        scheme = "pallas" if jax.default_backend() == "tpu" else "onehot"
-    if scheme == "scatter":
-        out = glcm_scatter(img, levels, d, theta)
-    elif scheme == "onehot":
-        out = glcm_onehot(img, levels, d, theta, copies=max(copies, 1))
-    elif scheme == "blocked":
-        out = glcm_blocked(img, levels, d, theta, num_blocks=num_blocks)
-    elif scheme == "pallas":
-        out = kops.glcm_pallas(img, levels, d, theta).astype(jnp.float32)
-    elif scheme == "pallas_fused":
-        out = kops.glcm_pallas_multi(img, levels, ((d, theta),))[..., 0, :, :].astype(
-            jnp.float32
-        )
-    else:
-        raise ValueError(f"unknown scheme {scheme!r}")
-    out = out.astype(jnp.float32)
-    if symmetric:
-        out = out + jnp.swapaxes(out, -1, -2)
-    if normalize:
-        out = out / jnp.maximum(out.sum(axis=(-2, -1), keepdims=True), 1.0)
-    return out
+    spec = GLCMSpec(
+        levels=levels,
+        pairs=((d, theta),),
+        scheme=scheme,
+        quantize=quantize,
+        symmetric=symmetric,
+        normalize=normalize,
+        copies=max(copies, 1),
+        num_blocks=num_blocks,
+    )
+    return compile_plan(spec, image.shape)(image)[..., 0, :, :]
 
 
 def glcm_features(
@@ -123,16 +109,8 @@ def glcm_features(
     """Image(s) → Haralick features over ``pairs`` offsets (normalized GLCMs).
 
     (H, W) input → (len(pairs), 14); (B, H, W) input → (B, len(pairs), 14).
+    One compiled program per request shape regardless of scheme.
     """
     _check_ndim(image)
-    img = _maybe_quantize(image, levels, quantize)
-    if scheme == "auto":
-        scheme = "pallas_fused" if jax.default_backend() == "tpu" else "onehot"
-    if scheme == "pallas_fused":
-        mats = kops.glcm_pallas_multi(img, levels, pairs).astype(jnp.float32)
-    else:
-        mats = jnp.stack(
-            [glcm(img, levels, d, t, scheme=scheme, quantize=None) for d, t in pairs],
-            axis=-3,
-        )
-    return haralick_features(mats)
+    spec = GLCMSpec(levels=levels, pairs=tuple(pairs), scheme=scheme, quantize=quantize)
+    return compile_plan(spec, image.shape, features=True)(image)

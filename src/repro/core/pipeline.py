@@ -11,6 +11,8 @@ exactly the paper's double buffer).
 ``GLCMStream`` is the generic engine; ``glcm_feature_stream`` is the
 convenience wrapper used by the texture-pipeline example (quantize → GLCM
 (multi-offset) → Haralick-14 per image, overlapped with the next transfer).
+Its device program is resolved through ``core.plan.compile_plan`` — one
+cached program per (spec, shape), shared with every other entry point.
 
 Batching: ``glcm_feature_stream(..., batch_size=B)`` coalesces the incoming
 image stream into fixed (B, H, W) stacks before dispatch, so each device
@@ -28,12 +30,11 @@ from collections.abc import Callable, Iterable, Iterator
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.haralick import haralick_features
-from repro.core.quantize import quantize_uniform
-from repro.core.schemes import PAPER_PAIRS, glcm_multi
+from repro.core.plan import compile_plan
+from repro.core.schemes import PAPER_PAIRS
+from repro.core.spec import GLCMSpec
 
 __all__ = ["GLCMStream", "glcm_feature_stream", "coalesce_images"]
 
@@ -110,15 +111,19 @@ class GLCMStream:
             )
 
 
+_UNSET = object()  # distinguishes "not passed" from an explicit vmin/vmax=None
+
+
 def glcm_feature_stream(
     images: Iterable[np.ndarray],
-    levels: int,
-    pairs: tuple[tuple[int, int], ...] = PAPER_PAIRS,
+    levels: int | None = None,
+    pairs: tuple[tuple[int, int], ...] | None = None,
     *,
+    spec: GLCMSpec | None = None,
     prefetch: int = 2,
     batch_size: int = 1,
-    vmin: float | None = 0.0,
-    vmax: float | None = 255.0,
+    vmin: float | None | object = _UNSET,
+    vmax: float | None | object = _UNSET,
 ) -> Iterator[jax.Array]:
     """Yield (len(pairs), 14) Haralick feature tensors per input image,
     with transfer/compute overlap.
@@ -126,18 +131,33 @@ def glcm_feature_stream(
     ``batch_size > 1`` coalesces the stream into (batch_size, H, W) stacks
     (one device dispatch per stack); results are unpacked and yielded per
     image in arrival order, so callers see the same protocol at any batch
-    size."""
+    size.
 
-    def _quant(img):
-        return quantize_uniform(img, levels, vmin=vmin, vmax=vmax)
+    The device program is resolved through ``core.plan.compile_plan`` —
+    pass a :class:`GLCMSpec` to pick scheme/quantization explicitly, or use
+    the legacy ``levels``/``pairs``/``vmin``/``vmax`` keywords, which build
+    the equivalent spec (uniform quantization pinned to [vmin, vmax])."""
+    if spec is None:
+        if levels is None:
+            raise ValueError("pass either spec= or levels")
+        vmin = 0.0 if vmin is _UNSET else vmin
+        vmax = 255.0 if vmax is _UNSET else vmax
+        vrange = None if (vmin is None and vmax is None) else (vmin, vmax)
+        spec = GLCMSpec(
+            levels=levels, pairs=PAPER_PAIRS if pairs is None else tuple(pairs),
+            scheme="auto", quantize="uniform", vrange=vrange,
+        )
+    elif (levels is not None or pairs is not None
+          or vmin is not _UNSET or vmax is not _UNSET):
+        raise ValueError(
+            "pass either spec= or the legacy levels/pairs/vmin/vmax keywords, "
+            "not both"
+        )
 
-    @jax.jit
     def fn(img):
-        # Per-image quantization whether img is (H, W) or a (B, H, W) stack
-        # (matters when vmin/vmax are data-derived).
-        q = jax.vmap(_quant)(img) if img.ndim == 3 else _quant(img)
-        g = glcm_multi(q, levels, pairs)
-        return haralick_features(g)
+        # One cached plan per incoming shape (the plan cache is shared with
+        # glcm/glcm_features/GLCMEngine — same spec + shape, same program).
+        return compile_plan(spec, img.shape, features=True)(img)
 
     if batch_size == 1:
         return GLCMStream(fn, prefetch=prefetch)(images)

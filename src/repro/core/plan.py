@@ -1,0 +1,159 @@
+"""compile_plan — spec + input shape → ONE cached, jitted program.
+
+This is the single execution layer every GLCM entry point goes through:
+
+    spec  = GLCMSpec(levels=32, pairs=PAPER_PAIRS, scheme="auto")
+    plan  = compile_plan(spec, imgs.shape)          # resolved, jitted, cached
+    mats  = plan(imgs)                              # (B, n_pairs, L, L)
+
+``compile_plan`` resolves "auto" against the backend registry, runs the
+backend's capability validation for the concrete shape, builds the full
+program (per-image quantize → backend vote counting → symmetric/normalize →
+optionally Haralick-14), jits it ONCE, and caches the resulting
+:class:`GLCMPlan` keyed by ``(spec, shape, features, require)``.  A repeated
+``(spec, shape)`` therefore returns the *same* compiled callable — no
+retrace, no recompile — which is what lets one program shape serve all
+traffic in ``serve.GLCMEngine`` and the streaming pipeline.
+
+Unbatched (H, W) inputs are lifted to a (1, H, W) stack for the backend's
+``compute`` contract and squeezed on the way out; batchedness is part of the
+cache key (a different program shape), exactly like jit's own shape
+specialization.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections.abc import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backends as _backends
+from repro.core.haralick import haralick_features
+from repro.core.quantize import quantize_equalized, quantize_uniform
+from repro.core.spec import GLCMSpec
+
+__all__ = ["GLCMPlan", "compile_plan", "plan_cache_clear", "plan_cache_stats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GLCMPlan:
+    """A resolved, compiled GLCM program for one input shape.
+
+    ``spec`` is fully resolved (``spec.scheme`` names a registered backend,
+    never "auto").  ``fn`` is the jitted program: (H, W) → (n_pairs, L, L)
+    or (B, H, W) → (B, n_pairs, L, L); with ``features`` the trailing
+    (L, L) becomes the Haralick-14 vector.
+    """
+
+    spec: GLCMSpec
+    backend: _backends.Backend
+    shape: tuple[int, ...]
+    features: bool
+    fn: Callable[[jax.Array], jax.Array]
+
+    def __call__(self, img: jax.Array) -> jax.Array:
+        return self.fn(img)
+
+
+_CACHE: dict = {}
+_LOCK = threading.Lock()
+_STATS = {"hits": 0, "misses": 0}
+
+
+def plan_cache_clear() -> None:
+    """Drop every cached plan (test/bench hygiene; programs recompile lazily)."""
+    with _LOCK:
+        _CACHE.clear()
+        _STATS["hits"] = _STATS["misses"] = 0
+
+
+def plan_cache_stats() -> dict:
+    """{'hits', 'misses', 'size'} of the plan cache (monotonic until clear)."""
+    with _LOCK:
+        return {**_STATS, "size": len(_CACHE)}
+
+
+def _quantizer(spec: GLCMSpec) -> Callable[[jax.Array], jax.Array] | None:
+    if spec.quantize is None:
+        return None
+    if spec.quantize == "uniform":
+        vmin, vmax = spec.vrange if spec.vrange is not None else (None, None)
+        return lambda im: quantize_uniform(im, spec.levels, vmin=vmin, vmax=vmax)
+    return lambda im: quantize_equalized(im, spec.levels)
+
+
+def compile_plan(
+    spec: GLCMSpec,
+    shape: tuple[int, ...],
+    *,
+    features: bool = False,
+    require: tuple[str, ...] = (),
+) -> GLCMPlan:
+    """Resolve ``spec`` for input ``shape`` and return the cached GLCMPlan.
+
+    ``shape`` is (H, W) or (B, H, W).  ``features=True`` appends the
+    Haralick-14 stage inside the same program (one dispatch per request).
+    ``require`` names capability fields the backend must declare (e.g.
+    ``("sharded_partial",)`` from the distributed layer); "auto" resolves to
+    a capable backend, and an explicitly named incapable one raises.
+    """
+    shape = tuple(int(s) for s in shape)
+    if len(shape) not in (2, 3):
+        raise ValueError(f"expected (H, W) or (B, H, W) shape, got {shape}")
+    require = tuple(require)
+    key = (spec, shape, features, require)
+    with _LOCK:
+        plan = _CACHE.get(key)
+        if plan is not None:
+            _STATS["hits"] += 1
+            return plan
+
+    name = _backends.resolve_scheme(spec, require=require)
+    backend = _backends.get_backend(name)
+    for cap in require:
+        if not getattr(backend.caps, cap):
+            raise ValueError(
+                f"scheme {name!r} lacks required capability {cap!r}"
+            )
+    resolved = spec if spec.scheme == name else spec.replace(scheme=name)
+
+    h, w = shape[-2:]
+    for (d, t), (dy, dx) in zip(resolved.pairs, resolved.offsets()):
+        if dy >= h or abs(dx) >= w:
+            raise ValueError(
+                f"offset (d={d}, theta={t}) → (dy={dy}, dx={dx}) exceeds "
+                f"image shape {(h, w)}"
+            )
+    if backend.validate is not None:
+        backend.validate(resolved, shape)
+
+    quant = _quantizer(resolved)
+    batched = len(shape) == 3
+
+    def run(img: jax.Array) -> jax.Array:
+        if quant is not None:
+            # Per-image quantization: each image of a batch uses its OWN
+            # value range (identical to quantizing one image at a time).
+            img = jax.vmap(quant)(img) if batched else quant(img)
+        img = img.astype(jnp.int32)
+        stack = img if batched else img[None]
+        mats = backend.compute(stack, resolved).astype(jnp.float32)
+        if resolved.symmetric:
+            mats = mats + jnp.swapaxes(mats, -1, -2)
+        if resolved.normalize:
+            mats = mats / jnp.maximum(mats.sum(axis=(-2, -1), keepdims=True), 1.0)
+        if features:
+            mats = haralick_features(mats)
+        return mats if batched else mats[0]
+
+    plan = GLCMPlan(
+        spec=resolved, backend=backend, shape=shape, features=features,
+        fn=jax.jit(run),
+    )
+    with _LOCK:
+        plan = _CACHE.setdefault(key, plan)
+        _STATS["misses"] += 1
+    return plan

@@ -157,6 +157,7 @@ def glcm_multi(
     *,
     symmetric: bool = False,
     normalize: bool = False,
+    copies: int = 1,
     dtype=jnp.float32,
 ) -> jax.Array:
     """Beyond-paper fusion: GLCMs for several (d, θ) offsets in one pass.
@@ -164,11 +165,13 @@ def glcm_multi(
     The associate one-hot matrix is built ONCE per offset group sharing the
     same valid region would require masking; here we amortize the *image
     read* (the memory-bound term) across offsets — XLA fuses the slices of
-    one buffer — and batch the L×L matmuls. Returns (len(pairs), L, L)."""
+    one buffer — and batch the L×L matmuls. ``copies`` is the paper's R,
+    forwarded to every per-offset voting matmul. Returns (len(pairs), L, L)."""
     return jnp.stack(
         [
             glcm_onehot(
-                img, levels, d, t, symmetric=symmetric, normalize=normalize, dtype=dtype
+                img, levels, d, t, symmetric=symmetric, normalize=normalize,
+                copies=copies, dtype=dtype,
             )
             for d, t in pairs
         ]

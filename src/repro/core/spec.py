@@ -1,0 +1,110 @@
+"""GLCMSpec — the frozen, hashable description of one GLCM workload.
+
+The paper's contribution is picking the *right execution strategy* per
+workload (contended scatter, R-copy privatized voting, stream-pipelined
+blocks).  A ``GLCMSpec`` captures everything that strategy choice depends
+on — gray levels, the (d, θ) offset set, quantization, post-processing,
+scheme knobs — as one immutable value, so the execution layer
+(``core.plan.compile_plan`` → ``core.backends`` registry) can resolve,
+compile and cache a program for it exactly once per ``(spec, shape)``.
+
+A spec is *pure data*: it never touches jax, never dispatches, and is
+hashable (usable as a cache key and as a jit static argument).  Scheme
+*names* are validated against the registry only at plan time — the spec
+layer stays import-light and backend-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.kernels.ref import glcm_offsets
+
+__all__ = ["GLCMSpec", "QUANTIZE_MODES"]
+
+# Valid ``quantize`` modes (``core.quantize``): None passes the image through
+# (already quantized), "uniform" rebins linearly, "equalized" equal-population.
+QUANTIZE_MODES = (None, "uniform", "equalized")
+
+
+@dataclasses.dataclass(frozen=True)
+class GLCMSpec:
+    """What to compute: GLCMs of ``levels`` gray levels over ``pairs`` offsets.
+
+    Fields
+    ------
+    levels      gray levels L of the output (L, L) matrices, in [2, 256].
+    pairs       (d, θ) offset tuples; every backend computes ALL of them in
+                one program (n_pairs axis of the result).
+    scheme      backend name ("scatter" | "onehot" | "blocked" | "pallas" |
+                "pallas_fused") or "auto" (resolved at plan time from the
+                running jax backend and the registry's capabilities).
+    quantize    pre-quantization mode (see QUANTIZE_MODES), applied per image.
+    symmetric   add the transpose (P + Pᵀ) after counting.
+    normalize   divide each matrix by its sum (probabilities, not counts).
+    copies      the paper's R: number of private sub-accumulators (Scheme 2).
+    num_blocks  row blocks for the blocked scheme (Scheme 3, single device).
+    vrange      static (vmin, vmax) for uniform quantization; None derives
+                the range from each image's own data (the default everywhere
+                except the streaming pipeline, which pins 0..255).
+    """
+
+    levels: int
+    pairs: tuple[tuple[int, int], ...] = ((1, 0),)
+    scheme: str = "auto"
+    quantize: str | None = None
+    symmetric: bool = False
+    normalize: bool = False
+    copies: int = 1
+    num_blocks: int = 4
+    vrange: tuple[float | None, float | None] | None = None
+
+    def __post_init__(self):
+        if not (2 <= self.levels <= 256):
+            raise ValueError(f"levels must be in [2, 256], got {self.levels}")
+        # Coerce pairs to a canonical hashable tuple-of-int-tuples (callers
+        # may hand us lists); validate each offset eagerly.
+        pairs = tuple((int(d), int(t)) for d, t in self.pairs)
+        object.__setattr__(self, "pairs", pairs)
+        if not pairs:
+            raise ValueError("spec.pairs must name at least one (d, theta) offset")
+        for d, t in pairs:
+            glcm_offsets(d, t)  # raises ValueError on bad d / theta
+        if self.quantize not in QUANTIZE_MODES:
+            raise ValueError(
+                f"unknown quantize mode {self.quantize!r}; expected one of {QUANTIZE_MODES}"
+            )
+        if not isinstance(self.scheme, str) or not self.scheme:
+            raise ValueError(f"scheme must be a non-empty string, got {self.scheme!r}")
+        if self.copies < 1:
+            raise ValueError(f"copies (R) must be >= 1, got {self.copies}")
+        if self.num_blocks < 1:
+            raise ValueError(f"num_blocks must be >= 1, got {self.num_blocks}")
+        if self.vrange is not None:
+            vmin, vmax = self.vrange
+            object.__setattr__(
+                self,
+                "vrange",
+                (None if vmin is None else float(vmin),
+                 None if vmax is None else float(vmax)),
+            )
+
+    @property
+    def n_pairs(self) -> int:
+        return len(self.pairs)
+
+    def offsets(self) -> tuple[tuple[int, int], ...]:
+        """(dy, dx) pixel offsets for every (d, θ) pair, in pair order."""
+        return tuple(glcm_offsets(d, t) for d, t in self.pairs)
+
+    def single_pair(self) -> tuple[int, int]:
+        """The sole (d, θ) pair, for single-offset consumers (sharded GLCM)."""
+        if len(self.pairs) != 1:
+            raise ValueError(
+                f"expected a single-offset spec, got {len(self.pairs)} pairs"
+            )
+        return self.pairs[0]
+
+    def replace(self, **changes) -> "GLCMSpec":
+        """A copy of this spec with ``changes`` applied (re-validated)."""
+        return dataclasses.replace(self, **changes)

@@ -18,7 +18,6 @@ H3 llava-next-34b × decode_32k (worst roofline fraction / memory-bound) —
 """
 
 import argparse
-import json
 
 from repro.launch.dryrun import run_cell
 

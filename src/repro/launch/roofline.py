@@ -19,7 +19,6 @@ useful-compute ratio MODEL_FLOPS / HLO_FLOPs (catches remat/dispatch waste).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 
 import numpy as np

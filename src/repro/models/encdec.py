@@ -9,7 +9,6 @@ Decode caches: per-layer self KV (grows) + cross KV (static, built once).
 
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

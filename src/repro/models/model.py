@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import encdec, transformer
-from repro.models.common import Params, dtype_of, param_count
+from repro.models.common import Params, dtype_of
 
 
 @dataclasses.dataclass(frozen=True)

@@ -26,7 +26,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ops import onehot_count
-from repro.sharding.logical import constrain
 from repro.models.common import Params, dense_init, split_keys
 from repro.models.layers import apply_mlp, init_mlp
 

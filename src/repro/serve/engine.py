@@ -16,7 +16,6 @@ padding results dropped.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -99,9 +98,28 @@ class GLCMServeConfig:
     image_shape: tuple[int, int] = (256, 256)
     batch_size: int = 8
     pairs: tuple[tuple[int, int], ...] = ((1, 0), (1, 45), (4, 0), (4, 45))
-    scheme: str = "auto"          # any repro.core.glcm scheme
+    scheme: str = "auto"          # any registered repro.core.backends scheme
     features: bool = True         # Haralick-14 per offset; False → raw GLCMs
     quantize: str | None = "uniform"
+    # Spec-native configuration: when given, ``spec`` overrides the
+    # levels/pairs/scheme/quantize fields above (which remain as the
+    # keyword-compatible legacy surface).
+    spec: "object | None" = None
+
+    def glcm_spec(self):
+        """The GLCMSpec this engine serves (explicit ``spec`` wins)."""
+        from repro.core.spec import GLCMSpec
+
+        if self.spec is not None:
+            if not isinstance(self.spec, GLCMSpec):
+                raise ValueError(f"cfg.spec must be a GLCMSpec, got {self.spec!r}")
+            return self.spec
+        return GLCMSpec(
+            levels=self.levels,
+            pairs=tuple(self.pairs),
+            scheme=self.scheme,
+            quantize=self.quantize,
+        )
 
 
 class GLCMEngine:
@@ -118,29 +136,24 @@ class GLCMEngine:
     Per request: Haralick features (len(pairs), 14) when ``cfg.features``,
     else the raw GLCM stack (len(pairs), L, L).
 
-    All requests must share ``cfg.image_shape`` so one XLA program (and one
-    Pallas launch per stack, for the fused scheme) serves every batch.
+    All requests must share ``cfg.image_shape`` so one program serves every
+    batch: the engine resolves its :class:`~repro.core.spec.GLCMSpec`
+    through ``core.plan.compile_plan`` exactly once for the fixed
+    (batch_size, H, W) stack shape — the plan cache guarantees repeated
+    engines with the same spec reuse the same compiled program.
     """
 
     def __init__(self, cfg: GLCMServeConfig = GLCMServeConfig()):
-        from repro.core.glcm import glcm, glcm_features
+        from repro.core.plan import compile_plan
 
         self.cfg = cfg
         if cfg.batch_size < 1:
             raise ValueError("batch_size must be >= 1")
-        if not cfg.pairs:
-            raise ValueError("cfg.pairs must name at least one (d, theta) offset")
-
-        if cfg.features:
-            fn = lambda stack: glcm_features(
-                stack, cfg.levels, cfg.pairs, scheme=cfg.scheme,
-                quantize=cfg.quantize)
-        else:
-            fn = lambda stack: jnp.stack(
-                [glcm(stack, cfg.levels, d, t, scheme=cfg.scheme,
-                      quantize=cfg.quantize) for d, t in cfg.pairs],
-                axis=-3)
-        self._fn = jax.jit(fn)
+        self.spec = cfg.glcm_spec()
+        h, w = cfg.image_shape
+        self.plan = compile_plan(
+            self.spec, (cfg.batch_size, h, w), features=cfg.features
+        )
         self._pending: list[tuple[int, np.ndarray]] = []
         self._results: dict[int, np.ndarray] = {}
         self._next_ticket = 0
@@ -187,7 +200,7 @@ class GLCMEngine:
         # Pad to the fixed stack shape — one compiled program for all
         # traffic. len(imgs) <= batch_size here, so exactly one group.
         (stack, k), = coalesce_images(imgs, self.cfg.batch_size)
-        out = np.asarray(self._fn(jnp.asarray(stack)))
+        out = np.asarray(self.plan(jnp.asarray(stack)))
         for i, t in enumerate(tickets):
             self._results[t] = out[i]
         self.batches_dispatched += 1

@@ -26,7 +26,6 @@ import re
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.common import tree_paths
@@ -95,7 +94,6 @@ def spec_for_path(cfg, path: str, ndim: int) -> P:
 def param_specs(cfg, params_tree) -> Any:
     """Tree of PartitionSpec matching ``params_tree`` (arrays or
     ShapeDtypeStructs)."""
-    flat = dict(tree_paths(params_tree))
 
     def walk(sub, prefix=""):
         out = {}

@@ -31,7 +31,6 @@ import signal
 import time
 from collections import deque
 from collections.abc import Callable
-from pathlib import Path
 from typing import Any
 
 import jax

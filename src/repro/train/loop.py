@@ -6,18 +6,14 @@ examples and launch/train.py use (CPU-scale here, mesh-scale on pods).
 from __future__ import annotations
 
 import dataclasses
-import time
-from pathlib import Path
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.data.tokens import SyntheticTokens
 from repro.launch.steps import make_train_step
 from repro.models import build_model
-from repro.sharding import named, param_specs
 from repro.train import checkpoint as ckpt
 from repro.train.fault_tolerance import GracefulShutdown, StepWatchdog
 
@@ -79,9 +75,6 @@ def train(cfg, loop: TrainLoopConfig, *, mesh=None,
                                                total_steps=loop.total_steps)
     else:
         step_fn, oinit = make_train_step(cfg, total_steps=loop.total_steps)
-
-    pspecs = param_specs(cfg, jax.eval_shape(lambda: api.init(jax.random.key(0))))
-    shardings = named(mesh, pspecs) if mesh is not None else None
 
     def init_state():
         params = api.init(jax.random.key(loop.seed))

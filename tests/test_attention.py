@@ -1,7 +1,6 @@
 """Attention unit tests: chunked online-softmax == direct softmax, GQA ==
 explicitly repeated MHA, SWA masking, RoPE properties."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

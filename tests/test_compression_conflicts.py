@@ -78,6 +78,7 @@ def test_conflict_analysis_separates_fig1_regimes():
     b32 = analyze_image(rand // 8, 32)
 
     assert a8["collision_rate"] > 3 * b8["collision_rate"], (a8, b8)
+    assert a32["collision_rate"] > 3 * b32["collision_rate"], (a32, b32)
     assert b8["collision_rate"] > b32["collision_rate"], "higher L must scatter votes"
     # random image ≈ uniform votes: collision close to 1/L²
     assert b32["collision_rate"] < 3 * b32["uniform_baseline"]

@@ -96,8 +96,6 @@ def test_optimizer_state_specs_factored():
 def test_cache_specs_structure():
     import jax.numpy as jnp
 
-    from repro.launch.mesh import make_host_mesh
-
     cfg = get_config("smollm-135m")
     caches = [{"k": jax.ShapeDtypeStruct((2, 4, 8, 3, 16), jnp.bfloat16),
                "v": jax.ShapeDtypeStruct((2, 4, 8, 3, 16), jnp.bfloat16),

@@ -1,0 +1,278 @@
+"""The spec → plan → backend-registry execution layer.
+
+Covers: GLCMSpec validation error paths, capability validation at plan time
+(blocked with a non-divisible height, missing sharded_partial), plan-cache
+identity (a repeated (spec, shape) returns the SAME compiled callable — no
+retrace), bit-exactness of the plan path against the numpy brute-force
+oracle, and symmetric/normalize on batched (B, H, W) inputs for EVERY
+registered scheme (previously only tested unbatched).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backends
+from repro.core.glcm import glcm, glcm_features
+from repro.core.plan import compile_plan, plan_cache_stats
+from repro.core.spec import GLCMSpec
+from repro.serve.engine import GLCMEngine, GLCMServeConfig
+
+from conftest import brute_force_glcm
+
+SCHEMES = ("scatter", "onehot", "blocked", "pallas", "pallas_fused")
+
+
+@pytest.fixture
+def stack(rng):
+    return jnp.asarray(rng.integers(0, 16, size=(4, 32, 32)), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Spec validation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "kwargs",
+    [
+        dict(levels=1),                             # levels out of range
+        dict(levels=8, pairs=()),                   # no offsets
+        dict(levels=8, pairs=((1, 30),)),           # bad theta
+        dict(levels=8, pairs=((0, 0),)),            # bad distance
+        dict(levels=8, quantize="nope"),            # unknown quantize mode
+        dict(levels=8, copies=0),                   # R must be >= 1
+        dict(levels=8, num_blocks=0),               # blocks must be >= 1
+        dict(levels=8, scheme=""),                  # empty scheme name
+    ],
+)
+def test_spec_validation_errors(kwargs):
+    with pytest.raises(ValueError):
+        GLCMSpec(**kwargs)
+
+
+def test_spec_is_hashable_and_canonical():
+    a = GLCMSpec(levels=8, pairs=[[1, 0], [4, 45]])      # lists coerced
+    b = GLCMSpec(levels=8, pairs=((1, 0), (4, 45)))
+    assert a == b and hash(a) == hash(b)
+    assert a.n_pairs == 2 and a.offsets() == ((0, 1), (4, -4))
+    with pytest.raises(ValueError):
+        a.single_pair()
+
+
+# ---------------------------------------------------------------------------
+# Plan-time validation (registry + capabilities + shape)
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_scheme_rejected_at_plan_time():
+    spec = GLCMSpec(levels=8, scheme="cuda")
+    with pytest.raises(ValueError, match="unknown scheme"):
+        compile_plan(spec, (32, 32))
+
+
+def test_blocked_rejects_non_divisible_height():
+    spec = GLCMSpec(levels=8, scheme="blocked", num_blocks=4)
+    with pytest.raises(ValueError, match="not divisible"):
+        compile_plan(spec, (2, 30, 32))
+    # halo taller than a block is equally unservable
+    tall = GLCMSpec(levels=8, pairs=((9, 90),), scheme="blocked", num_blocks=4)
+    with pytest.raises(ValueError, match="exceeds block height"):
+        compile_plan(tall, (32, 32))
+
+
+def test_offset_exceeding_image_rejected():
+    spec = GLCMSpec(levels=8, pairs=((40, 0),))
+    with pytest.raises(ValueError, match="exceeds"):
+        compile_plan(spec, (32, 32))
+
+
+def test_capability_requirement_enforced():
+    spec = GLCMSpec(levels=8, scheme="scatter")
+    with pytest.raises(ValueError, match="sharded_partial"):
+        compile_plan(spec, (32, 32), require=("sharded_partial",))
+    # "auto" resolves to a capable backend instead of raising
+    auto = compile_plan(GLCMSpec(levels=8), (32, 32), require=("sharded_partial",))
+    assert auto.backend.caps.sharded_partial
+    assert auto.backend.local_partial is not None
+
+
+def test_registry_contents_and_caps():
+    names = backends.available_backends()
+    assert set(SCHEMES) <= set(names)
+    assert backends.get_backend("pallas_fused").caps.multi_offset_fused
+    assert backends.get_backend("pallas").caps.batch_grid
+    assert not backends.get_backend("scatter").caps.multi_offset_fused
+    with pytest.raises(ValueError, match="already registered"):
+        backends.register(backends.get_backend("onehot"))
+
+
+# ---------------------------------------------------------------------------
+# Plan cache: one compiled program per (spec, shape)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_returns_same_callable():
+    spec = GLCMSpec(levels=16, pairs=((1, 45),), scheme="onehot")
+    p1 = compile_plan(spec, (32, 48))
+    p2 = compile_plan(spec, (32, 48))
+    assert p1 is p2 and p1.fn is p2.fn
+    # equal-but-distinct spec objects share the entry (hash by value)
+    p3 = compile_plan(GLCMSpec(levels=16, pairs=((1, 45),), scheme="onehot"),
+                      (32, 48))
+    assert p3 is p1
+    # a different shape (or batchedness) is a different program
+    assert compile_plan(spec, (2, 32, 48)) is not p1
+
+
+def test_repeated_requests_do_not_retrace(rng):
+    img = jnp.asarray(rng.integers(0, 16, (24, 24)), jnp.int32)
+    spec = GLCMSpec(levels=16, pairs=((2, 90),), scheme="scatter")
+    plan = compile_plan(spec, img.shape)
+    misses0 = plan_cache_stats()["misses"]
+    a = np.asarray(plan(img))
+    b = np.asarray(plan(img))
+    np.testing.assert_array_equal(a, b)
+    # the wrapper API must hit the same cache entry: no new compilation
+    c = np.asarray(glcm(img, 16, 2, 90, scheme="scatter"))
+    np.testing.assert_array_equal(a[0], c)   # plan keeps the n_pairs axis
+    stats = plan_cache_stats()
+    assert stats["misses"] == misses0
+    if hasattr(plan.fn, "_cache_size"):       # jit traced exactly once
+        assert plan.fn._cache_size() == 1
+
+
+def test_engine_and_wrapper_share_plan_cache():
+    cfg = GLCMServeConfig(levels=8, image_shape=(32, 32), batch_size=2)
+    eng = GLCMEngine(cfg)
+    again = GLCMEngine(cfg)
+    assert eng.plan is again.plan             # same compiled program object
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness of the plan path, batched symmetric/normalize for all schemes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("d,theta", [(1, 0), (1, 45), (2, 135)])
+def test_plan_matches_brute_force_unbatched(rng, scheme, d, theta):
+    levels = 16
+    img = rng.integers(0, levels, (32, 40)).astype(np.int32)
+    want = brute_force_glcm(img, levels, d, theta)
+    got = np.asarray(glcm(jnp.asarray(img), levels, d, theta, scheme=scheme))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_batched_symmetric_all_schemes(stack, scheme):
+    levels = 16
+    got = np.asarray(glcm(stack, levels, 1, 45, scheme=scheme, symmetric=True))
+    assert got.shape == (stack.shape[0], levels, levels)
+    np.testing.assert_allclose(got, np.swapaxes(got, -1, -2))
+    for i in range(stack.shape[0]):
+        bf = brute_force_glcm(np.asarray(stack[i]), levels, 1, 45)
+        np.testing.assert_array_equal(got[i], bf + bf.T)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_batched_normalize_all_schemes(stack, scheme):
+    levels = 16
+    got = np.asarray(glcm(stack, levels, 1, 0, scheme=scheme, normalize=True))
+    np.testing.assert_allclose(got.sum(axis=(-2, -1)), 1.0, rtol=1e-6)
+    for i in range(stack.shape[0]):
+        bf = brute_force_glcm(np.asarray(stack[i]), levels, 1, 0).astype(np.float64)
+        np.testing.assert_allclose(got[i], bf / bf.sum(), rtol=1e-6, atol=1e-9)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_batched_symmetric_normalize_combined(stack, scheme):
+    levels = 16
+    got = np.asarray(
+        glcm(stack, levels, 1, 90, scheme=scheme, symmetric=True, normalize=True)
+    )
+    np.testing.assert_allclose(got, np.swapaxes(got, -1, -2))
+    np.testing.assert_allclose(got.sum(axis=(-2, -1)), 1.0, rtol=1e-6)
+    # batched result == per-image loop through the same public API
+    want = np.stack([
+        np.asarray(glcm(stack[i], levels, 1, 90, scheme=scheme,
+                        symmetric=True, normalize=True))
+        for i in range(stack.shape[0])
+    ])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_auto_resolution_matches_registry(stack):
+    # On this CPU host "auto" must resolve to the conflict-free jnp scheme.
+    plan = compile_plan(GLCMSpec(levels=16), tuple(stack.shape))
+    assert plan.spec.scheme == backends.resolve_scheme(GLCMSpec(levels=16))
+    got = np.asarray(glcm(stack, 16, 1, 0, scheme="auto"))
+    want = np.asarray(glcm(stack, 16, 1, 0, scheme=plan.spec.scheme))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_features_one_program_matches_per_pair(rng):
+    """The fused multi-offset feature path must agree with composing the
+    public single-offset API by hand (the pre-refactor per-pair loop)."""
+    from repro.core.haralick import haralick_features
+
+    levels = 8
+    pairs = ((1, 0), (1, 45), (4, 0), (4, 45))
+    img = jnp.asarray(rng.uniform(0, 255, (32, 32)), jnp.float32)
+    got = np.asarray(glcm_features(img, levels, pairs, scheme="onehot"))
+    mats = jnp.stack(
+        [glcm(img, levels, d, t, scheme="onehot", quantize="uniform")
+         for d, t in pairs]
+    )
+    want = np.asarray(haralick_features(mats))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_engine_accepts_explicit_spec():
+    rng = np.random.default_rng(7)
+    imgs = [rng.integers(0, 256, (16, 16)).astype(np.float32) for _ in range(3)]
+    spec = GLCMSpec(levels=8, pairs=((1, 0), (1, 90)), scheme="scatter",
+                    quantize="uniform")
+    eng = GLCMEngine(GLCMServeConfig(image_shape=(16, 16), batch_size=2,
+                                     features=False, spec=spec))
+    out = eng.map(imgs)
+    assert out.shape == (3, 2, 8, 8)
+    for k, (d, t) in enumerate(spec.pairs):
+        want = np.asarray(glcm(jnp.asarray(imgs[0]), 8, d, t, scheme="scatter",
+                               quantize="uniform"))
+        np.testing.assert_array_equal(out[0, k], want)
+
+
+def test_stream_accepts_explicit_spec():
+    from repro.core.pipeline import glcm_feature_stream
+
+    rng = np.random.default_rng(8)
+    imgs = [rng.integers(0, 256, (16, 16)).astype(np.float32) for _ in range(4)]
+    spec = GLCMSpec(levels=8, pairs=((1, 0), (1, 45), (4, 0), (4, 45)),
+                    scheme="onehot", quantize="uniform", vrange=(0.0, 255.0))
+    got = [np.asarray(f) for f in glcm_feature_stream(imgs, spec=spec,
+                                                      batch_size=2)]
+    want = [np.asarray(f) for f in glcm_feature_stream(imgs, levels=8)]
+    assert len(got) == 4
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-6)
+    with pytest.raises(ValueError, match="not both"):
+        next(iter(glcm_feature_stream(imgs, levels=8, spec=spec)))
+    with pytest.raises(ValueError, match="not both"):
+        next(iter(glcm_feature_stream(imgs, pairs=((1, 0),), spec=spec)))
+    with pytest.raises(ValueError, match="not both"):
+        next(iter(glcm_feature_stream(imgs, spec=spec, vmin=0.0)))
+    with pytest.raises(ValueError, match="spec= or levels"):
+        next(iter(glcm_feature_stream(imgs)))
+
+
+def test_sharded_rejects_multi_pair_spec():
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.core.distributed import glcm_sharded
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    spec = GLCMSpec(levels=8, pairs=((1, 0), (1, 45)))
+    with pytest.raises(ValueError, match="single-offset"):
+        glcm_sharded(jnp.zeros((8, 8), jnp.int32), mesh=mesh, spec=spec)

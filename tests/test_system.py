@@ -2,7 +2,6 @@
 → Haralick) agrees across every scheme including the Pallas kernels and the
 streamed pipeline, and the LM framework trains/serves around it."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -1,7 +1,5 @@
 """Optimizers, checkpointing, fault tolerance, data pipeline, train loop."""
 
-import os
-import signal
 import time
 
 import jax
