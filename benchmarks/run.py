@@ -18,7 +18,8 @@ import jax
 from benchmarks import common
 
 MODULES = ("table2_scheme1", "table3_scheme2", "table4_transfer",
-           "fig4_async", "fig5_speedup", "moe_dispatch", "batch_throughput")
+           "fig4_async", "fig5_speedup", "moe_dispatch", "batch_throughput",
+           "texture_map")
 
 
 def _batch_speedups(rows: list[dict]) -> dict:
@@ -39,6 +40,18 @@ def _serial_speedups(rows: list[dict]) -> dict:
         for r in rows
         if "speedup_vs_serial" in r
     }
+
+
+def _texture_map_speedups(rows: list[dict]) -> dict:
+    """region/scheme → region-plan-vs-patch-loop speedup (plus the
+    select-subset-vs-full-14 feature ratio) from texture_map's rows."""
+    out: dict = {}
+    for r in rows:
+        if "speedup_vs_loop" in r:
+            out[f"{r['region']}/{r['scheme']}"] = round(r["speedup_vs_loop"], 3)
+        if "speedup_vs_full14" in r:
+            out["features_select2"] = round(r["speedup_vs_full14"], 3)
+    return out
 
 
 def main() -> None:
@@ -76,6 +89,7 @@ def main() -> None:
             "speedups": {
                 "batch_vs_b1": _batch_speedups(common.RESULTS),
                 "vs_serial_cpu": _serial_speedups(common.RESULTS),
+                "texture_map_vs_loop": _texture_map_speedups(common.RESULTS),
             },
             "rows": common.RESULTS,
         }

@@ -1,0 +1,101 @@
+"""Texture-map throughput — per-region GLCM + Haralick maps (spec.region).
+
+The workload the paper's whole-image tables don't cover: one GLCM (and
+feature vector) per tile/window of an image, the unit of output for
+segmentation and industrial-inspection texture maps. Three questions:
+
+  1. What does the region-structured plan buy over the naive host loop
+     ("extract patches, call glcm() per patch") it is oracle-tested against?
+     → ``speedup_vs_loop``.
+  2. How do the native fused region paths (onehot's batched voting matmuls,
+     the windowed Pallas kernel) compare to the generic patch-extraction
+     fallback (scatter)? → compare schemes at fixed grid.
+  3. What does ``select=`` skipping the O(L³) f14 eigendecomposition buy on
+     a per-window feature map? → ``speedup_vs_full14``.
+
+Runs on CPU in CI (interpret-mode Pallas): absolute numbers are not TPU
+numbers, but the ratios are what the benchmark tracks across PRs.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.plan import compile_plan
+from repro.core.schemes import extract_regions
+from repro.core.spec import GLCMSpec
+
+SIZE = 128
+LEVELS = 16
+REGION = (32, 32)
+STRIDE = (16, 16)          # overlapping windows: 7×7 grid of 32×32 patches
+SCHEMES = ("onehot", "pallas_fused", "scatter")
+
+
+def _loop_baseline(img, spec):
+    """The pre-region idiom: one plan per patch shape, one dispatch PER patch."""
+    patches = extract_regions(img, spec.region_shape, spec.strides)
+    gh, gw = patches.shape[:2]
+    flat = spec.replace(region="global", region_shape=None, region_stride=None)
+    plan = compile_plan(flat, tuple(patches.shape[-2:]))
+    return jnp.stack(
+        [jnp.stack([plan(patches[i, j]) for j in range(gw)]) for i in range(gh)]
+    )
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    img = jnp.asarray(rng.integers(0, LEVELS, size=(SIZE, SIZE)), jnp.int32)
+
+    for region, kw in (
+        ("tiles", dict(region="tiles", region_shape=REGION)),
+        ("window", dict(region="window", region_shape=REGION,
+                        region_stride=STRIDE)),
+    ):
+        for scheme in SCHEMES:
+            spec = GLCMSpec(levels=LEVELS, pairs=((1, 0), (1, 45)),
+                            scheme=scheme, **kw)
+            plan = compile_plan(spec, (SIZE, SIZE))
+            gh, gw = plan.grid
+            us = time_fn(plan, img)
+            loop_us = time_fn(lambda im, s=spec: _loop_baseline(im, s), img)
+            wps = gh * gw / (us * 1e-6)
+            emit(
+                f"texture_map/{region}/{scheme}/{SIZE}px_r{REGION[0]}",
+                us,
+                f"windows_per_sec={wps:.0f}_x{loop_us / us:.2f}_vs_loop",
+                scheme=scheme,
+                region=region,
+                resolution=SIZE,
+                region_shape=list(REGION),
+                grid=[gh, gw],
+                windows_per_sec=round(wps, 1),
+                speedup_vs_loop=loop_us / us,
+            )
+
+    # Feature maps: full Haralick-14 vs a contrast/entropy subset (the f14
+    # eigendecomposition dominates per-window feature cost).
+    fspec = GLCMSpec(levels=LEVELS, pairs=((1, 0),), scheme="onehot",
+                     region="window", region_shape=REGION, region_stride=STRIDE)
+    full = compile_plan(fspec, (SIZE, SIZE), features=True)
+    sub = compile_plan(fspec, (SIZE, SIZE),
+                       features=("contrast", "entropy"))
+    full_us = time_fn(full, img)
+    sub_us = time_fn(sub, img)
+    emit(
+        f"texture_map/features/full14/{SIZE}px",
+        full_us,
+        f"grid={full.grid[0]}x{full.grid[1]}",
+        region="window",
+        resolution=SIZE,
+        n_features=14,
+    )
+    emit(
+        f"texture_map/features/select2/{SIZE}px",
+        sub_us,
+        f"x{full_us / sub_us:.2f}_vs_full14",
+        region="window",
+        resolution=SIZE,
+        n_features=2,
+        speedup_vs_full14=full_us / sub_us,
+    )

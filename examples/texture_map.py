@@ -1,0 +1,78 @@
+"""Per-window Haralick texture maps — region-structured GLCM end to end.
+
+    PYTHONPATH=src python examples/texture_map.py
+
+Builds a synthetic image whose left half is smooth and right half is noisy,
+then computes a sliding-window contrast/entropy map with ONE compiled
+program (``GLCMSpec(region="window")`` → ``compile_plan``): one GLCM per
+32×32 window at stride 8, Haralick features per window, eigendecomposition
+skipped via ``features=("contrast", "entropy")``. The printed map shows the
+texture boundary the per-image API cannot see.
+"""
+
+import numpy as np
+
+from repro.core.plan import compile_plan
+from repro.core.spec import GLCMSpec
+
+SIZE = 128
+WINDOW = (32, 32)
+STRIDE = (8, 8)
+LEVELS = 16
+
+
+def make_image(rng: np.random.Generator) -> np.ndarray:
+    """Left half: smooth gradient (low contrast); right half: noise."""
+    img = np.tile(np.linspace(0, 255, SIZE, dtype=np.float32), (SIZE, 1))
+    img[:, SIZE // 2 :] = rng.uniform(0, 255, (SIZE, SIZE // 2))
+    return img
+
+
+def ascii_map(values: np.ndarray, title: str) -> None:
+    lo, hi = float(values.min()), float(values.max())
+    ramp = " .:-=+*#%@"
+    print(f"\n{title}  (min={lo:.3g}, max={hi:.3g})")
+    for row in values:
+        idx = ((row - lo) / max(hi - lo, 1e-9) * (len(ramp) - 1)).astype(int)
+        print("".join(ramp[i] for i in idx))
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    img = make_image(rng)
+
+    spec = GLCMSpec(
+        levels=LEVELS,
+        pairs=((1, 0), (1, 90)),           # horizontal + vertical structure
+        quantize="uniform",
+        vrange=(0.0, 255.0),
+        region="window",
+        region_shape=WINDOW,
+        region_stride=STRIDE,
+    )
+    plan = compile_plan(
+        spec, img.shape, features=("contrast", "entropy")
+    )
+    fmap = np.asarray(plan(img))           # (gh, gw, n_pairs, 2)
+    gh, gw = plan.grid
+    print(
+        f"{SIZE}×{SIZE} image → {gh}×{gw} windows of {WINDOW[0]}×{WINDOW[1]} "
+        f"at stride {STRIDE[0]} → feature map {fmap.shape}"
+    )
+
+    contrast = fmap[:, :, 0, 0]            # θ=0° contrast per window
+    entropy = fmap[:, :, 0, 1]
+    ascii_map(contrast, "contrast map (θ=0°) — noise half lights up")
+    ascii_map(entropy, "entropy map (θ=0°)")
+
+    # The boundary is where the texture statistics jump.
+    col_mean = contrast.mean(axis=0)
+    boundary = int(np.argmax(np.diff(col_mean)))
+    print(
+        f"\nsharpest contrast jump between window columns {boundary} and "
+        f"{boundary + 1} (true boundary at x={SIZE // 2})"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,14 @@
 """repro.core — the paper's contribution (GLCM computation) as a library.
 
 Execution layer (spec → plan → backend):
-  spec        GLCMSpec, the frozen description of one GLCM workload
+  spec        GLCMSpec, the frozen description of one GLCM workload —
+              including its region structure ("global" per-image GLCMs, or
+              "tiles"/"window" per-region texture maps)
   backends    the scheme registry (scatter / onehot / blocked / pallas /
-              pallas_fused) — the ONLY place scheme names are dispatched
+              pallas_fused) — the ONLY place scheme names are dispatched;
+              region-aware via native paths or the patch-extraction fallback
   plan        compile_plan: spec + shape → one cached, jitted program
+              (bounded LRU; (B, *grid, n_pairs, L, L) region contract)
 
 Modules:
   glcm        public API (thin wrappers building specs, executing plans)

@@ -30,7 +30,13 @@ from collections.abc import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.schemes import glcm_blocked, glcm_multi, glcm_scatter
+from repro.core.schemes import (
+    extract_regions,
+    glcm_blocked,
+    glcm_multi,
+    glcm_scatter,
+    glcm_windowed,
+)
 from repro.core.spec import GLCMSpec
 from repro.kernels import ops as kops
 
@@ -38,6 +44,7 @@ __all__ = [
     "Backend",
     "Capabilities",
     "available_backends",
+    "compute_regions",
     "get_backend",
     "register",
     "resolve_scheme",
@@ -53,6 +60,8 @@ class Capabilities:
     tpu_only: bool = False            # compiled target is TPU (interpret elsewhere)
     sharded_partial: bool = False     # supplies sentinel-masked partials for
     #                                   halo-exchange sharding (distributed.*)
+    region_grid: bool = False         # native per-region path: one fused program
+    #                                   over the tile/window grid (texture maps)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,7 +73,10 @@ class Backend:
     tracing.  ``local_partial(ext, levels, dy, dx, local_h)`` (optional, for
     ``caps.sharded_partial``) computes the partial GLCM of a halo-extended
     row shard with -1 sentinels dropped — the per-shard hook the distributed
-    layer consumes.
+    layer consumes.  ``region_compute(img_batch, spec)`` (optional, for
+    ``caps.region_grid``) serves non-global specs natively, returning
+    (B, gh, gw, n_pairs, L, L); backends without it are served by the
+    generic patch-extraction fallback in :func:`compute_regions`.
     """
 
     name: str
@@ -72,6 +84,30 @@ class Backend:
     caps: Capabilities = Capabilities()
     validate: Callable[[GLCMSpec, tuple[int, ...]], None] | None = None
     local_partial: Callable[..., jax.Array] | None = None
+    region_compute: Callable[[jax.Array, GLCMSpec], jax.Array] | None = None
+
+
+def compute_regions(
+    backend: Backend, img_batch: jax.Array, spec: GLCMSpec
+) -> jax.Array:
+    """Region-aware dispatch: (B, H, W) → (B, *grid, n_pairs, L, L) counts.
+
+    "global" specs go straight to ``backend.compute`` (grid = ()). Non-global
+    specs use the backend's native ``region_compute`` when it declares
+    ``caps.region_grid``; otherwise the generic fallback extracts the
+    (gh, gw) patch grid ONCE and feeds it through ``backend.compute`` as a
+    flat (B·gh·gw, rh, rw) batch — every registered strategy serves
+    tiled/windowed workloads unchanged.
+    """
+    if spec.region == "global":
+        return backend.compute(img_batch, spec)
+    if backend.caps.region_grid:
+        # register() guarantees region_compute is present iff the cap is set.
+        return backend.region_compute(img_batch, spec)
+    patches = extract_regions(img_batch, spec.region_shape, spec.strides)
+    b, gh, gw, rh, rw = patches.shape
+    mats = backend.compute(patches.reshape(b * gh * gw, rh, rw), spec)
+    return mats.reshape((b, gh, gw) + mats.shape[1:])
 
 
 _REGISTRY: dict[str, Backend] = {}
@@ -83,6 +119,11 @@ def register(backend: Backend) -> Backend:
         raise ValueError(f"backend {backend.name!r} is already registered")
     if backend.name == "auto":
         raise ValueError('"auto" is reserved for scheme resolution')
+    if backend.caps.region_grid != (backend.region_compute is not None):
+        raise ValueError(
+            f"backend {backend.name!r}: caps.region_grid must match the "
+            "presence of region_compute"
+        )
     _REGISTRY[backend.name] = backend
     return backend
 
@@ -148,6 +189,15 @@ def _onehot_local_partial(ext, levels, dy, dx, local_h):
     return local_partial_glcm(ext, levels, dy, dx, local_h)
 
 
+def _onehot_region_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
+    # Native fused windowed path: one extraction + batched voting matmuls
+    # with the window grid as the dot_general batch axis.
+    return glcm_windowed(
+        img, spec.levels, spec.pairs, spec.region_shape, spec.strides,
+        copies=spec.copies,
+    )
+
+
 def _blocked_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
     return jnp.stack(
         [
@@ -186,6 +236,15 @@ def _pallas_fused_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
     return kops.glcm_pallas_multi(img, spec.levels, spec.pairs).astype(jnp.float32)
 
 
+def _pallas_fused_region_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
+    # Windowed Pallas variant: extraction in XLA, voting in one kernel launch
+    # with the (B, gh, gw) window grid as the kernel grid axes.
+    patches = extract_regions(img, spec.region_shape, spec.strides)
+    return kops.glcm_pallas_windowed(
+        patches, spec.levels, spec.pairs
+    ).astype(jnp.float32)
+
+
 register(
     Backend(
         name="scatter",
@@ -197,8 +256,11 @@ register(
     Backend(
         name="onehot",
         compute=_onehot_compute,
-        caps=Capabilities(multi_offset_fused=True, sharded_partial=True),
+        caps=Capabilities(
+            multi_offset_fused=True, sharded_partial=True, region_grid=True
+        ),
         local_partial=_onehot_local_partial,
+        region_compute=_onehot_region_compute,
     )
 )
 register(
@@ -220,6 +282,10 @@ register(
     Backend(
         name="pallas_fused",
         compute=_pallas_fused_compute,
-        caps=Capabilities(multi_offset_fused=True, batch_grid=True, tpu_only=True),
+        caps=Capabilities(
+            multi_offset_fused=True, batch_grid=True, tpu_only=True,
+            region_grid=True,
+        ),
+        region_compute=_pallas_fused_region_compute,
     )
 )

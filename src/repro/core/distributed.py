@@ -22,6 +22,15 @@ cross-validate the explicit version and in the dry-run roofline — and
 ``glcm_sharded_batch``, which adds the serving dimension: a (B, H, W) stack
 of images whose *batch* axis is sharded over one mesh axis while the rows of
 each image reuse the same halo-exchange sharding over another.
+
+Region-structured specs (``spec.region`` of "tiles"/"window") change the
+decomposition: instead of sharding raw image rows and exchanging halos, the
+**window grid itself** is sharded — the (gh, gw) grid of regions is
+extracted once and its row axis distributed over the mesh. Every region is
+wholly owned by one device, so there is NO halo exchange and no final psum:
+the output (…, gh, gw, L, L) texture map stays sharded along the grid axis
+(pure map parallelism — the paper's image partitioning as the unit of
+distribution rather than an intra-GLCM trick).
 """
 
 from __future__ import annotations
@@ -104,6 +113,18 @@ def local_partial_glcm(
     )
 
 
+def _region_grid_partials(patches: jax.Array, local_partial, levels, dy, dx):
+    """Per-region GLCMs of a (..., gw, rh, rw) patch block: every region is
+    wholly local, so the partial of each patch (halo-free: local_h = rh - dy)
+    IS its exact GLCM."""
+    rh, rw = patches.shape[-2:]
+    flat = patches.reshape((-1, rh, rw)).astype(jnp.int32)
+    mats = jax.vmap(
+        lambda p: local_partial(p, levels, dy, dx, rh - dy)
+    )(flat)
+    return mats.reshape(patches.shape[:-2] + (levels, levels))
+
+
 def glcm_sharded(
     img: jax.Array,
     levels: int | None = None,
@@ -120,12 +141,38 @@ def glcm_sharded(
     backend must declare ``sharded_partial``); pass ``spec=`` for the
     spec-native API or the legacy ``(levels, d, theta)`` scalars.
     Returns the full (L, L) int32 GLCM, replicated on every device.
+
+    With a region-structured ``spec`` the WINDOW GRID is sharded instead of
+    raw rows: the (gh, gw) region grid is extracted and its row axis
+    distributed over ``axis`` (gh must divide evenly). Regions never span
+    shards, so no halo is exchanged and no psum is needed; returns the
+    (gh, gw, L, L) int32 texture map, sharded along gh.
     """
     if mesh is None:
         raise ValueError("glcm_sharded requires a mesh")
     axes = (axis,) if isinstance(axis, str) else tuple(axis)
     plan, levels, (dy, dx) = _shard_plan(levels, d, theta, spec, img.shape)
     local_partial = plan.backend.local_partial
+    if spec is not None and spec.region != "global":
+        from repro.core.schemes import extract_regions
+
+        n_shards = 1
+        for a in axes:
+            n_shards *= mesh.shape[a]
+        patches = extract_regions(img, spec.region_shape, spec.strides)
+        gh = patches.shape[0]
+        if gh % n_shards:
+            raise ValueError(
+                f"region grid height {gh} not divisible by {n_shards} shards"
+            )
+        flat_axis = axes if len(axes) > 1 else axes[0]
+        fn = _shard_map(
+            lambda p: _region_grid_partials(p, local_partial, levels, dy, dx),
+            mesh=mesh,
+            in_specs=P(flat_axis, None, None, None),
+            out_specs=P(flat_axis, None, None, None),
+        )
+        return fn(patches)
     h, w = img.shape
     n_shards = 1
     for a in axes:
@@ -189,6 +236,12 @@ def glcm_sharded_batch(
     Returns the full (B, L, L) int32 GLCM stack; the batch axis of the
     result stays sharded over ``batch_axis``, each (L, L) slice replicated
     within its row-sharding group.
+
+    With a region-structured ``spec`` the WINDOW GRID replaces raw rows as
+    the second sharding axis: the (B, gh, gw) grid of regions is extracted
+    and gh sharded over ``row_axis`` (no halo exchange, no psum — regions
+    are wholly device-local). Returns the (B, gh, gw, L, L) int32 texture
+    maps, sharded over (batch_axis, row_axis).
     """
     if imgs.ndim != 3:
         raise ValueError(f"expected (B, H, W) image stack, got {imgs.shape}")
@@ -200,6 +253,23 @@ def glcm_sharded_batch(
     n_batch = mesh.shape[batch_axis]
     if b % n_batch:
         raise ValueError(f"batch {b} not divisible by {n_batch} shards")
+    if spec is not None and spec.region != "global":
+        from repro.core.schemes import extract_regions
+
+        n_rows = mesh.shape[row_axis] if row_axis is not None else 1
+        patches = extract_regions(imgs, spec.region_shape, spec.strides)
+        gh = patches.shape[1]
+        if gh % n_rows:
+            raise ValueError(
+                f"region grid height {gh} not divisible by {n_rows} shards"
+            )
+        fn = _shard_map(
+            lambda p: _region_grid_partials(p, local_partial, levels, dy, dx),
+            mesh=mesh,
+            in_specs=P(batch_axis, row_axis, None, None, None),
+            out_specs=P(batch_axis, row_axis, None, None, None),
+        )
+        return fn(patches)
     n_rows = mesh.shape[row_axis] if row_axis is not None else 1
     if h % n_rows:
         raise ValueError(f"image height {h} not divisible by {n_rows} shards")
@@ -254,12 +324,18 @@ def glcm_auto_sharded(
 
     The compute is resolved through the backend registry (same conflict-free
     backend the halo-exchange path uses), applied to the globally-sharded
-    image so GSPMD inserts the reduction."""
+    image so GSPMD inserts the reduction. Region-structured specs return the
+    (gh, gw, L, L) texture map (GSPMD shards the extraction + per-region
+    voting; no reduction is needed across regions)."""
+    from repro.core import backends as _backends
+
     if mesh is None:
         raise ValueError("glcm_auto_sharded requires a mesh")
     plan, levels, _ = _shard_plan(levels, d, theta, spec, img.shape)
     sharded = jax.lax.with_sharding_constraint(
         img, NamedSharding(mesh, P(axis, None))
     )
-    out = plan.backend.compute(sharded[None].astype(jnp.int32), plan.spec)
-    return out[0, 0].astype(jnp.int32)
+    out = _backends.compute_regions(
+        plan.backend, sharded[None].astype(jnp.int32), plan.spec
+    )
+    return out[0, ..., 0, :, :].astype(jnp.int32)

@@ -42,6 +42,20 @@ Multi-offset is first-class for EVERY scheme: ``glcm_features`` compiles one
 program covering all ``pairs`` (the jnp schemes via the fused ``glcm_multi``,
 the Pallas fused kernel via one image pass) — never a Python loop of
 per-pair dispatches.
+
+Region-structured workloads (texture maps)
+------------------------------------------
+``region="tiles"`` / ``region="window"`` switch the unit of output from the
+whole image to a tile/window grid — one GLCM (or feature vector) per region:
+
+    P = glcm.glcm(img, 32, region="tiles", region_shape=64)      # (gh, gw, L, L)
+    F = glcm.glcm_features(img, 32, region="window",
+                           region_shape=32, region_stride=8)     # (gh, gw, 4, 14)
+
+``region="global"`` (the default) is bit-exact with the pre-region API.
+Every registered scheme serves region specs (native fused paths for
+"onehot"/"pallas_fused", a generic patch-extraction fallback elsewhere), and
+each region's result equals ``glcm()`` of the extracted patch.
 """
 
 from __future__ import annotations
@@ -78,11 +92,16 @@ def glcm(
     normalize: bool = False,
     copies: int = 1,
     num_blocks: int = 4,
+    region: str = "global",
+    region_shape: tuple[int, int] | int | None = None,
+    region_stride: tuple[int, int] | int | None = None,
 ) -> jax.Array:
     """Gray-level co-occurrence matrix of image(s), float32.
 
     (H, W) input → (L, L); (B, H, W) input → (B, L, L), computed batched
     (vmap for the jnp schemes, a batch grid axis for the Pallas kernels).
+    Non-global ``region`` inserts the (gh, gw) region grid before the (L, L)
+    axes: one GLCM per tile/window.
     """
     _check_ndim(image)
     spec = GLCMSpec(
@@ -94,6 +113,9 @@ def glcm(
         normalize=normalize,
         copies=max(copies, 1),
         num_blocks=num_blocks,
+        region=region,
+        region_shape=region_shape,
+        region_stride=region_stride,
     )
     return compile_plan(spec, image.shape)(image)[..., 0, :, :]
 
@@ -105,12 +127,24 @@ def glcm_features(
     *,
     scheme: Scheme = "auto",
     quantize: str | None = "uniform",
+    region: str = "global",
+    region_shape: tuple[int, int] | int | None = None,
+    region_stride: tuple[int, int] | int | None = None,
+    select: tuple[str, ...] | None = None,
 ) -> jax.Array:
     """Image(s) → Haralick features over ``pairs`` offsets (normalized GLCMs).
 
     (H, W) input → (len(pairs), 14); (B, H, W) input → (B, len(pairs), 14).
-    One compiled program per request shape regardless of scheme.
+    Non-global ``region`` inserts the (gh, gw) region grid before the
+    (len(pairs), n_feats) axes — a per-region texture map. ``select`` names a
+    Haralick feature subset (columns follow its order; skips the O(L³)
+    ``max_correlation_coefficient`` solve when unselected). One compiled
+    program per request shape regardless of scheme.
     """
     _check_ndim(image)
-    spec = GLCMSpec(levels=levels, pairs=tuple(pairs), scheme=scheme, quantize=quantize)
-    return compile_plan(spec, image.shape, features=True)(image)
+    spec = GLCMSpec(
+        levels=levels, pairs=tuple(pairs), scheme=scheme, quantize=quantize,
+        region=region, region_shape=region_shape, region_stride=region_stride,
+    )
+    features = True if select is None else tuple(select)
+    return compile_plan(spec, image.shape, features=features)(image)

@@ -53,8 +53,15 @@ def _entropy(p: jax.Array, axis=None) -> jax.Array:
     return -jnp.sum(p * jnp.log(p + _EPS), axis=axis)
 
 
-def _haralick_single(p: jax.Array) -> jax.Array:
-    """(L, L) normalized GLCM → (14,) feature vector."""
+def _haralick_single(p: jax.Array, select: tuple[int, ...]) -> jax.Array:
+    """(L, L) normalized GLCM → (len(select),) feature vector.
+
+    ``select`` holds FEATURE_NAMES indices, output columns follow its order.
+    f1–f13 are O(L²) and always computed; the O(L³) eigendecomposition of
+    f14 (max_correlation_coefficient) is traced ONLY when index 13 is
+    selected — for texture maps with thousands of windows per image it
+    dominates feature cost.
+    """
     L = p.shape[-1]
     i = jnp.arange(L, dtype=p.dtype)
     ii, jj = jnp.meshgrid(i, i, indexing="ij")
@@ -98,26 +105,56 @@ def _haralick_single(p: jax.Array) -> jax.Array:
     f12 = (hxy - hxy1) / jnp.maximum(jnp.maximum(hx, hy), _EPS)
     f13 = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(-2.0 * (hxy2 - hxy)), 0.0))
 
-    # f14: sqrt of second-largest eigenvalue of Q, Q[i,j] = Σ_k p[i,k]p[j,k]/
-    # (px[i]py[k]). Q = D_x^{-1/2} (A Aᵀ) D_x^{1/2} with A = P/√(px py) — so
-    # Q's spectrum equals that of the symmetric PSD matrix AAᵀ, which we hand
-    # to eigvalsh (stable, real, in [0, 1]; the largest is exactly 1).
-    a_mat = p / jnp.sqrt(
-        jnp.maximum(px[:, None], _EPS) * jnp.maximum(py[None, :], _EPS)
-    )
-    eig = jnp.linalg.eigvalsh(a_mat @ a_mat.T)
-    f14 = jnp.sqrt(jnp.clip(jnp.sort(eig)[-2], 0.0, None))
+    feats = [f1, f2, f3, f4, f5, f6, f7, f8, f9, f10, f11, f12, f13]
 
-    return jnp.stack([f1, f2, f3, f4, f5, f6, f7, f8, f9, f10, f11, f12, f13, f14])
+    if 13 in select:
+        # f14: sqrt of second-largest eigenvalue of Q, Q[i,j] = Σ_k p[i,k]
+        # p[j,k]/(px[i]py[k]). Q = D_x^{-1/2} (A Aᵀ) D_x^{1/2} with
+        # A = P/√(px py) — so Q's spectrum equals that of the symmetric PSD
+        # matrix AAᵀ, which we hand to eigvalsh (stable, real, in [0, 1];
+        # the largest is exactly 1).
+        a_mat = p / jnp.sqrt(
+            jnp.maximum(px[:, None], _EPS) * jnp.maximum(py[None, :], _EPS)
+        )
+        eig = jnp.linalg.eigvalsh(a_mat @ a_mat.T)
+        feats.append(jnp.sqrt(jnp.clip(jnp.sort(eig)[-2], 0.0, None)))
+
+    return jnp.stack([feats[i] for i in select])
 
 
-def haralick_features(glcm: jax.Array, *, assume_normalized: bool = False) -> jax.Array:
-    """GLCM(s) → Haralick-14.
+def _select_indices(select: tuple[str, ...] | None) -> tuple[int, ...]:
+    if select is None:
+        return tuple(range(len(FEATURE_NAMES)))
+    idx = []
+    for name in select:
+        if name not in FEATURE_NAMES:
+            raise ValueError(
+                f"unknown Haralick feature {name!r}; expected names from "
+                f"{FEATURE_NAMES}"
+            )
+        idx.append(FEATURE_NAMES.index(name))
+    if not idx:
+        raise ValueError("select=() names no features")
+    return tuple(idx)
 
-    Accepts (..., L, L); returns (..., 14). Raw counts are normalized unless
-    ``assume_normalized``.
+
+def haralick_features(
+    glcm: jax.Array,
+    *,
+    assume_normalized: bool = False,
+    select: tuple[str, ...] | None = None,
+) -> jax.Array:
+    """GLCM(s) → Haralick features.
+
+    Accepts (..., L, L); returns (..., n_feats). Raw counts are normalized
+    unless ``assume_normalized``. ``select`` names a subset of
+    :data:`FEATURE_NAMES` — output columns follow its order, and work the
+    selection doesn't need is skipped (only the O(L³) eigendecomposition of
+    ``max_correlation_coefficient`` is expensive enough to matter). The
+    default ``None`` computes all 14 in canonical order.
     """
+    idx = _select_indices(select)
     p = glcm if assume_normalized else normalize_glcm(glcm)
     flat = p.reshape((-1,) + p.shape[-2:])
-    feats = jax.vmap(_haralick_single)(flat)
-    return feats.reshape(p.shape[:-2] + (len(FEATURE_NAMES),))
+    feats = jax.vmap(lambda q: _haralick_single(q, idx))(flat)
+    return feats.reshape(p.shape[:-2] + (len(idx),))

@@ -136,7 +136,11 @@ def glcm_feature_stream(
     The device program is resolved through ``core.plan.compile_plan`` —
     pass a :class:`GLCMSpec` to pick scheme/quantization explicitly, or use
     the legacy ``levels``/``pairs``/``vmin``/``vmax`` keywords, which build
-    the equivalent spec (uniform quantization pinned to [vmin, vmax])."""
+    the equivalent spec (uniform quantization pinned to [vmin, vmax]).
+    A region-structured spec (``spec.region`` of "tiles"/"window") streams
+    per-image TEXTURE MAPS instead: each yielded tensor gains the (gh, gw)
+    region grid — (gh, gw, len(pairs), 14) per image — with the same
+    transfer/compute overlap and batching protocol."""
     if spec is None:
         if levels is None:
             raise ValueError("pass either spec= or levels")

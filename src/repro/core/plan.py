@@ -9,11 +9,27 @@ This is the single execution layer every GLCM entry point goes through:
 ``compile_plan`` resolves "auto" against the backend registry, runs the
 backend's capability validation for the concrete shape, builds the full
 program (per-image quantize → backend vote counting → symmetric/normalize →
-optionally Haralick-14), jits it ONCE, and caches the resulting
+optionally Haralick features), jits it ONCE, and caches the resulting
 :class:`GLCMPlan` keyed by ``(spec, shape, features, require)``.  A repeated
 ``(spec, shape)`` therefore returns the *same* compiled callable — no
 retrace, no recompile — which is what lets one program shape serve all
-traffic in ``serve.GLCMEngine`` and the streaming pipeline.
+traffic in ``serve.GLCMEngine`` and the streaming pipeline.  The cache is a
+bounded LRU (``plan_cache_limit``, default 128 plans) so a long-lived server
+that sees many shapes cannot leak compiled programs; evictions show up in
+``plan_cache_stats()``.
+
+Region-structured workloads (``spec.region`` of "tiles"/"window") generalize
+the contract: counts become (B, gh, gw, n_pairs, L, L) and features
+(B, gh, gw, n_pairs, n_feats), where (gh, gw) is the tile/window grid —
+validated against the concrete image shape (divisibility, window fit) BEFORE
+tracing, with the per-region dispatch resolved through
+``backends.compute_regions`` (native fused paths or the generic
+patch-extraction fallback).
+
+``features`` may be ``True`` (all 14 Haralick features) or a tuple of
+feature names — a subset skips work the selection doesn't need (notably the
+O(L³) eigendecomposition of ``max_correlation_coefficient``, which dominates
+texture-map feature cost).
 
 Unbatched (H, W) inputs are lifted to a (1, H, W) stack for the backend's
 ``compute`` contract and squeezed on the way out; batchedness is part of the
@@ -23,6 +39,7 @@ specialization.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 from collections.abc import Callable
@@ -31,11 +48,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import backends as _backends
-from repro.core.haralick import haralick_features
+from repro.core.haralick import FEATURE_NAMES, haralick_features
 from repro.core.quantize import quantize_equalized, quantize_uniform
 from repro.core.spec import GLCMSpec
 
-__all__ = ["GLCMPlan", "compile_plan", "plan_cache_clear", "plan_cache_stats"]
+__all__ = [
+    "GLCMPlan",
+    "compile_plan",
+    "plan_cache_clear",
+    "plan_cache_limit",
+    "plan_cache_stats",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,37 +66,59 @@ class GLCMPlan:
     """A resolved, compiled GLCM program for one input shape.
 
     ``spec`` is fully resolved (``spec.scheme`` names a registered backend,
-    never "auto").  ``fn`` is the jitted program: (H, W) → (n_pairs, L, L)
-    or (B, H, W) → (B, n_pairs, L, L); with ``features`` the trailing
-    (L, L) becomes the Haralick-14 vector.
+    never "auto").  ``grid`` is the region grid — () for "global", else
+    (gh, gw).  ``fn`` is the jitted program: (H, W) → (*grid, n_pairs, L, L)
+    or (B, H, W) → (B, *grid, n_pairs, L, L); with ``features`` the trailing
+    (L, L) becomes the selected Haralick feature vector.
     """
 
     spec: GLCMSpec
     backend: _backends.Backend
     shape: tuple[int, ...]
-    features: bool
+    features: bool | tuple[str, ...]
     fn: Callable[[jax.Array], jax.Array]
+    grid: tuple[int, ...] = ()
 
     def __call__(self, img: jax.Array) -> jax.Array:
         return self.fn(img)
 
 
-_CACHE: dict = {}
+_DEFAULT_CACHE_LIMIT = 128
+_CACHE: collections.OrderedDict = collections.OrderedDict()
 _LOCK = threading.Lock()
-_STATS = {"hits": 0, "misses": 0}
+_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+_LIMIT = [_DEFAULT_CACHE_LIMIT]
 
 
 def plan_cache_clear() -> None:
     """Drop every cached plan (test/bench hygiene; programs recompile lazily)."""
     with _LOCK:
         _CACHE.clear()
-        _STATS["hits"] = _STATS["misses"] = 0
+        _STATS["hits"] = _STATS["misses"] = _STATS["evictions"] = 0
+
+
+def plan_cache_limit(limit: int | None = None) -> int:
+    """Get (no argument) or set the LRU bound on cached plans.
+
+    Setting a smaller bound evicts least-recently-used plans immediately.
+    The bound must be >= 1; the default is 128.
+    """
+    with _LOCK:
+        if limit is not None:
+            if limit < 1:
+                raise ValueError(f"plan cache limit must be >= 1, got {limit}")
+            _LIMIT[0] = int(limit)
+            while len(_CACHE) > _LIMIT[0]:
+                _CACHE.popitem(last=False)
+                _STATS["evictions"] += 1
+        return _LIMIT[0]
 
 
 def plan_cache_stats() -> dict:
-    """{'hits', 'misses', 'size'} of the plan cache (monotonic until clear)."""
+    """{'hits', 'misses', 'evictions', 'size', 'limit'} of the plan cache
+    (counters monotonic until clear)."""
     with _LOCK:
-        return {**_STATS, "size": len(_CACHE)}
+        return {**_STATS, "size": len(_CACHE), "limit": _LIMIT[0]}
 
 
 def _quantizer(spec: GLCMSpec) -> Callable[[jax.Array], jax.Array] | None:
@@ -85,29 +130,50 @@ def _quantizer(spec: GLCMSpec) -> Callable[[jax.Array], jax.Array] | None:
     return lambda im: quantize_equalized(im, spec.levels)
 
 
+def _canonical_features(features) -> bool | tuple[str, ...]:
+    """Validate/canonicalize the ``features`` argument (bool or name tuple)."""
+    if isinstance(features, bool):
+        return features
+    names = tuple(features)
+    for name in names:
+        if name not in FEATURE_NAMES:
+            raise ValueError(
+                f"unknown Haralick feature {name!r}; expected names from "
+                f"{FEATURE_NAMES}"
+            )
+    if not names:
+        raise ValueError("features=() selects nothing; pass False instead")
+    return names
+
+
 def compile_plan(
     spec: GLCMSpec,
     shape: tuple[int, ...],
     *,
-    features: bool = False,
+    features: bool | tuple[str, ...] = False,
     require: tuple[str, ...] = (),
 ) -> GLCMPlan:
     """Resolve ``spec`` for input ``shape`` and return the cached GLCMPlan.
 
-    ``shape`` is (H, W) or (B, H, W).  ``features=True`` appends the
-    Haralick-14 stage inside the same program (one dispatch per request).
-    ``require`` names capability fields the backend must declare (e.g.
-    ``("sharded_partial",)`` from the distributed layer); "auto" resolves to
-    a capable backend, and an explicitly named incapable one raises.
+    ``shape`` is (H, W) or (B, H, W).  ``features=True`` appends the full
+    Haralick-14 stage inside the same program (one dispatch per request); a
+    tuple of feature names selects a subset in the given order (skipping the
+    expensive eigendecomposition when ``max_correlation_coefficient`` is not
+    requested).  ``require`` names capability fields the backend must declare
+    (e.g. ``("sharded_partial",)`` from the distributed layer); "auto"
+    resolves to a capable backend, and an explicitly named incapable one
+    raises.
     """
     shape = tuple(int(s) for s in shape)
     if len(shape) not in (2, 3):
         raise ValueError(f"expected (H, W) or (B, H, W) shape, got {shape}")
     require = tuple(require)
+    features = _canonical_features(features)
     key = (spec, shape, features, require)
     with _LOCK:
         plan = _CACHE.get(key)
         if plan is not None:
+            _CACHE.move_to_end(key)
             _STATS["hits"] += 1
             return plan
 
@@ -121,39 +187,62 @@ def compile_plan(
     resolved = spec if spec.scheme == name else spec.replace(scheme=name)
 
     h, w = shape[-2:]
-    for (d, t), (dy, dx) in zip(resolved.pairs, resolved.offsets()):
-        if dy >= h or abs(dx) >= w:
-            raise ValueError(
-                f"offset (d={d}, theta={t}) → (dy={dy}, dx={dx}) exceeds "
-                f"image shape {(h, w)}"
-            )
+    # Region validation happens against the concrete image shape BEFORE any
+    # tracing: tile divisibility / window fit...
+    grid = resolved.region_grid(h, w)
+    if grid:
+        # ...and the backend sees patches, never the whole image, so its own
+        # shape validation runs on the per-region shape it will serve.
+        n_regions = shape[0] * grid[0] * grid[1] if len(shape) == 3 else (
+            grid[0] * grid[1]
+        )
+        backend_shape: tuple[int, ...] = (n_regions,) + resolved.region_shape
+    else:
+        # Spec offsets are validated against the region for non-global specs
+        # (at spec construction); for "global" the region IS the image.
+        for (d, t), (dy, dx) in zip(resolved.pairs, resolved.offsets()):
+            if dy >= h or abs(dx) >= w:
+                raise ValueError(
+                    f"offset (d={d}, theta={t}) → (dy={dy}, dx={dx}) exceeds "
+                    f"image shape {(h, w)}"
+                )
+        backend_shape = shape
     if backend.validate is not None:
-        backend.validate(resolved, shape)
+        backend.validate(resolved, backend_shape)
 
     quant = _quantizer(resolved)
     batched = len(shape) == 3
+    select = None if isinstance(features, bool) else features
 
     def run(img: jax.Array) -> jax.Array:
         if quant is not None:
             # Per-image quantization: each image of a batch uses its OWN
             # value range (identical to quantizing one image at a time).
+            # Regions share their image's quantization — one gray-level
+            # mapping per texture map, never per window.
             img = jax.vmap(quant)(img) if batched else quant(img)
         img = img.astype(jnp.int32)
         stack = img if batched else img[None]
-        mats = backend.compute(stack, resolved).astype(jnp.float32)
+        mats = _backends.compute_regions(backend, stack, resolved).astype(
+            jnp.float32
+        )
         if resolved.symmetric:
             mats = mats + jnp.swapaxes(mats, -1, -2)
         if resolved.normalize:
             mats = mats / jnp.maximum(mats.sum(axis=(-2, -1), keepdims=True), 1.0)
         if features:
-            mats = haralick_features(mats)
+            mats = haralick_features(mats, select=select)
         return mats if batched else mats[0]
 
     plan = GLCMPlan(
         spec=resolved, backend=backend, shape=shape, features=features,
-        fn=jax.jit(run),
+        fn=jax.jit(run), grid=grid,
     )
     with _LOCK:
         plan = _CACHE.setdefault(key, plan)
+        _CACHE.move_to_end(key)
         _STATS["misses"] += 1
+        while len(_CACHE) > _LIMIT[0]:
+            _CACHE.popitem(last=False)
+            _STATS["evictions"] += 1
     return plan

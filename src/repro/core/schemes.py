@@ -33,6 +33,8 @@ __all__ = [
     "glcm_onehot",
     "glcm_multi",
     "glcm_blocked",
+    "glcm_windowed",
+    "extract_regions",
     "PAPER_PAIRS",
 ]
 
@@ -93,9 +95,10 @@ def glcm_scatter(
 # ---------------------------------------------------------------------------
 
 def _onehot(v: jax.Array, levels: int, dtype) -> jax.Array:
-    """(P,) int → (P, L) one-hot via iota compare (VPU-friendly; no gather)."""
-    iota = jax.lax.broadcasted_iota(jnp.int32, (v.shape[0], levels), 1)
-    return (v[:, None] == iota).astype(dtype)
+    """(..., P) int → (..., P, L) one-hot via iota compare (VPU-friendly; no
+    gather); entries of -1 (masked/padded votes) give an all-zero row."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, v.shape + (levels,), v.ndim)
+    return (v[..., None] == iota).astype(dtype)
 
 
 @_batch_aware
@@ -176,6 +179,87 @@ def glcm_multi(
             for d, t in pairs
         ]
     )
+
+
+# ---------------------------------------------------------------------------
+# Region extraction + the fused per-region scheme (texture maps)
+# ---------------------------------------------------------------------------
+
+
+def extract_regions(
+    img: jax.Array,
+    region_shape: tuple[int, int],
+    stride: tuple[int, int],
+) -> jax.Array:
+    """Extract the (gh, gw) grid of (rh, rw) regions from (..., H, W) images.
+
+    Returns (..., gh, gw, rh, rw). ``stride == region_shape`` is the paper's
+    non-overlapping image partition (realized as a pure reshape/transpose —
+    no gather); smaller strides give overlapping sliding windows (one fused
+    gather on the trailing two axes, shared by every leading batch dim).
+    """
+    rh, rw = region_shape
+    sy, sx = stride
+    h, w = img.shape[-2:]
+    if rh > h or rw > w:
+        raise ValueError(f"region {(rh, rw)} exceeds image shape {(h, w)}")
+    if (sy, sx) == (rh, rw) and h % rh == 0 and w % rw == 0:
+        gh, gw = h // rh, w // rw
+        tiled = img.reshape(img.shape[:-2] + (gh, rh, gw, rw))
+        return jnp.swapaxes(tiled, -3, -2)
+    gh = (h - rh) // sy + 1
+    gw = (w - rw) // sx + 1
+    rows = sy * jnp.arange(gh)[:, None] + jnp.arange(rh)[None, :]   # (gh, rh)
+    cols = sx * jnp.arange(gw)[:, None] + jnp.arange(rw)[None, :]   # (gw, rw)
+    return img[..., rows[:, None, :, None], cols[None, :, None, :]]
+
+
+def glcm_windowed(
+    img: jax.Array,
+    levels: int,
+    pairs: tuple[tuple[int, int], ...],
+    region_shape: tuple[int, int],
+    stride: tuple[int, int],
+    *,
+    copies: int = 1,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Per-region GLCMs in one fused program: ONE region extraction, then
+    batched one-hot voting matmuls with the flattened window grid as the
+    dot_general batch axis (Scheme 2's conflict-free voting, per window).
+
+    ``img`` is (H, W) → (gh, gw, n_pairs, L, L) or (B, H, W) →
+    (B, gh, gw, n_pairs, L, L). Pairs are counted strictly within each
+    region, so the result for every window equals ``glcm_multi`` of the
+    extracted patch. ``copies`` is the paper's R, splitting each window's
+    pair stream into private sub-accumulators.
+    """
+    if copies < 1:
+        raise ValueError(f"copies (R) must be >= 1, got {copies}")
+    patches = extract_regions(img, region_shape, stride)
+    lead = patches.shape[:-2]
+    flat = patches.reshape((-1,) + patches.shape[-2:]).astype(jnp.int32)
+
+    def votes(d: int, t: int) -> jax.Array:
+        assoc, ref = pair_planes(flat, d, t)   # one fused slice for all windows
+        a = assoc.reshape(flat.shape[0], -1)
+        r = ref.reshape(flat.shape[0], -1)
+        pad = (-a.shape[1]) % copies
+        if pad:   # pad each window's pair stream with dead votes (-1 rows)
+            a = jnp.pad(a, ((0, 0), (0, pad)), constant_values=-1)
+            r = jnp.pad(r, ((0, 0), (0, pad)), constant_values=-1)
+        a = a.reshape(a.shape[0] * copies, -1)
+        r = r.reshape(r.shape[0] * copies, -1)
+        A = _onehot(a, levels, dtype)          # (N·R, P/R, L)
+        R = _onehot(r, levels, dtype)
+        sub = jax.lax.dot_general(
+            R, A, (((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )                                      # (N·R, L, L)
+        return sub.reshape(-1, copies, levels, levels).sum(axis=1)
+
+    mats = jnp.stack([votes(d, t) for d, t in pairs], axis=1)
+    return mats.reshape(lead + (len(pairs), levels, levels))
 
 
 # ---------------------------------------------------------------------------

@@ -20,11 +20,30 @@ import dataclasses
 
 from repro.kernels.ref import glcm_offsets
 
-__all__ = ["GLCMSpec", "QUANTIZE_MODES"]
+__all__ = ["GLCMSpec", "QUANTIZE_MODES", "REGION_MODES"]
 
 # Valid ``quantize`` modes (``core.quantize``): None passes the image through
 # (already quantized), "uniform" rebins linearly, "equalized" equal-population.
 QUANTIZE_MODES = (None, "uniform", "equalized")
+
+# Valid ``region`` modes: "global" is one GLCM per whole image (the classic
+# workload), "tiles" one GLCM per cell of a non-overlapping partition (the
+# paper's image-partitioning scheme as a user-visible workload), "window" one
+# GLCM per sliding window (per-pixel/per-stride texture maps).
+REGION_MODES = ("global", "tiles", "window")
+
+
+def _shape2(value, name: str) -> tuple[int, int]:
+    """Canonicalize an int or (h, w) pair to a validated int 2-tuple."""
+    if isinstance(value, int):
+        value = (value, value)
+    try:
+        rh, rw = (int(v) for v in value)
+    except (TypeError, ValueError):
+        raise ValueError(f"{name} must be an int or an (h, w) pair, got {value!r}") from None
+    if rh < 1 or rw < 1:
+        raise ValueError(f"{name} entries must be >= 1, got {(rh, rw)}")
+    return rh, rw
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +66,19 @@ class GLCMSpec:
     vrange      static (vmin, vmax) for uniform quantization; None derives
                 the range from each image's own data (the default everywhere
                 except the streaming pipeline, which pins 0..255).
+    region      workload axis (see REGION_MODES): "global" (default; one GLCM
+                per image, bit-exact legacy behavior), "tiles" (one GLCM per
+                cell of the non-overlapping ``region_shape`` partition), or
+                "window" (one GLCM per sliding ``region_shape`` window at
+                ``region_stride``). Non-global outputs gain a (gh, gw) region
+                grid between the batch and n_pairs axes.
+    region_shape   (rh, rw) tile/window size (an int means square); required
+                for "tiles"/"window", forbidden for "global". Pairs are
+                counted strictly WITHIN each region, so every offset must fit
+                inside it (dy < rh, |dx| < rw).
+    region_stride  (sy, sx) sliding-window step for "window" (defaults to
+                (1, 1): a dense per-pixel texture map); forbidden otherwise
+                ("tiles" strides by its own shape, by definition).
     """
 
     levels: int
@@ -58,6 +90,9 @@ class GLCMSpec:
     copies: int = 1
     num_blocks: int = 4
     vrange: tuple[float | None, float | None] | None = None
+    region: str = "global"
+    region_shape: tuple[int, int] | int | None = None
+    region_stride: tuple[int, int] | int | None = None
 
     def __post_init__(self):
         if not (2 <= self.levels <= 256):
@@ -88,10 +123,72 @@ class GLCMSpec:
                 (None if vmin is None else float(vmin),
                  None if vmax is None else float(vmax)),
             )
+        if self.region not in REGION_MODES:
+            raise ValueError(
+                f"unknown region mode {self.region!r}; expected one of {REGION_MODES}"
+            )
+        if self.region == "global":
+            if self.region_shape is not None or self.region_stride is not None:
+                raise ValueError(
+                    'region="global" takes no region_shape/region_stride'
+                )
+        else:
+            if self.region_shape is None:
+                raise ValueError(f'region={self.region!r} requires region_shape')
+            rh, rw = _shape2(self.region_shape, "region_shape")
+            object.__setattr__(self, "region_shape", (rh, rw))
+            if self.region == "tiles":
+                if self.region_stride is not None:
+                    raise ValueError(
+                        'region="tiles" strides by its own shape; '
+                        "region_stride must be unset"
+                    )
+            else:
+                stride = (1, 1) if self.region_stride is None else self.region_stride
+                object.__setattr__(
+                    self, "region_stride", _shape2(stride, "region_stride")
+                )
+            # Pairs are counted within each region: every offset must fit.
+            for (d, t), (dy, dx) in zip(pairs, self.offsets()):
+                if dy >= rh or abs(dx) >= rw:
+                    raise ValueError(
+                        f"offset (d={d}, theta={t}) → (dy={dy}, dx={dx}) does "
+                        f"not fit inside region_shape {(rh, rw)}"
+                    )
 
     @property
     def n_pairs(self) -> int:
         return len(self.pairs)
+
+    @property
+    def strides(self) -> tuple[int, int] | None:
+        """Effective region stride: tiles step by their own shape."""
+        if self.region == "global":
+            return None
+        return self.region_shape if self.region == "tiles" else self.region_stride
+
+    def region_grid(self, h: int, w: int) -> tuple[int, ...]:
+        """The (gh, gw) region-grid for an (h, w) image; () for "global".
+
+        Raises ValueError when the image cannot host the configured regions
+        (non-divisible tile partition, window larger than the image).
+        """
+        if self.region == "global":
+            return ()
+        rh, rw = self.region_shape
+        if self.region == "tiles":
+            if h % rh or w % rw:
+                raise ValueError(
+                    f"image shape {(h, w)} not divisible into "
+                    f"region_shape={(rh, rw)} tiles"
+                )
+            return (h // rh, w // rw)
+        if rh > h or rw > w:
+            raise ValueError(
+                f"window region_shape {(rh, rw)} exceeds image shape {(h, w)}"
+            )
+        sy, sx = self.region_stride
+        return ((h - rh) // sy + 1, (w - rw) // sx + 1)
 
     def offsets(self) -> tuple[tuple[int, int], ...]:
         """(dy, dx) pixel offsets for every (d, θ) pair, in pair order."""

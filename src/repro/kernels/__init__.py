@@ -1,7 +1,8 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
   glcm_kernel       pair-stream + fused tiled GLCM voting (one-hot MXU,
-                    R-copy VMEM privatization, halo via next-tile Ref)
+                    R-copy VMEM privatization, halo via next-tile Ref) and
+                    the windowed texture-map kernel (window grid = kernel grid)
   histogram_kernel  the paper §II.A histogram analogy
   ops               jit'd wrappers (interpret on CPU, Mosaic on TPU) and the
                     shared ``onehot_count`` primitive used by the MoE router
@@ -9,13 +10,20 @@
 """
 
 from repro.kernels import ops, ref
-from repro.kernels.ops import glcm_pallas, glcm_pallas_multi, histogram, onehot_count
+from repro.kernels.ops import (
+    glcm_pallas,
+    glcm_pallas_multi,
+    glcm_pallas_windowed,
+    histogram,
+    onehot_count,
+)
 
 __all__ = [
     "ops",
     "ref",
     "glcm_pallas",
     "glcm_pallas_multi",
+    "glcm_pallas_windowed",
     "histogram",
     "onehot_count",
 ]

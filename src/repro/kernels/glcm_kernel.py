@@ -21,6 +21,16 @@ Two kernels:
     double-buffers the HBM→VMEM tile DMA against compute — exactly the
     two-stream timeline of paper Fig. 3, but structural.
 
+``glcm_window_kernel`` — the region-structured workload (sliding-window /
+    tiled texture maps): the input is the extracted (B, gh, gw, rh, rw)
+    patch grid and the **window grid rides the kernel grid axes** — grid =
+    (B, gh, gw), one grid cell per window, each voting its patch's
+    multi-offset GLCM into its own output block (no cross-step accumulation:
+    windows are independent, so the grid is embarrassingly parallel and the
+    HBM→VMEM patch DMA double-buffers against the previous window's voting
+    matmuls). This is the paper's image-partitioning idea promoted from an
+    internal blocking trick to the unit of output.
+
 Both kernels carry a **batch grid axis**: the grid is (B, steps) and the
 output block index_map pins each image's accumulator to its batch slot, so a
 (B, H, W) stack is processed in ONE ``pallas_call`` launch instead of B —
@@ -47,6 +57,7 @@ from jax.experimental import pallas as pl
 __all__ = [
     "glcm_vote_pallas",
     "glcm_fused_pallas",
+    "glcm_window_pallas",
     "DEFAULT_CHUNK",
     "DEFAULT_COPIES",
 ]
@@ -197,6 +208,100 @@ def _fused_kernel(
         r_flat = jnp.where(col_ok & row_ok, shifted, -1).reshape(-1)
         sub = _vote_matmul(r_flat, a_flat, levels, copies)
         o_ref[0, k, :, :] += sub
+
+
+# ---------------------------------------------------------------------------
+# Kernel 3: region-structured voting — the window grid IS the kernel grid
+# ---------------------------------------------------------------------------
+
+def _window_kernel(
+    p_ref,
+    o_ref,
+    *,
+    levels: int,
+    copies: int,
+    offsets: tuple[tuple[int, int], ...],
+    rh: int,
+    rw: int,
+):
+    # One grid cell per (batch, window-row, window-col): this cell's patch is
+    # in VMEM and its output block is private, so the whole GLCM is produced
+    # by straight assignment — no @pl.when init, no revisited accumulator.
+    patch = p_ref[...].reshape(rh, rw)
+    for k, (dy, dx) in enumerate(offsets):  # static unroll over directions
+        # Intra-window pair planes (paper Eq. (2) addressing, region-local):
+        # pairs never cross a window boundary, by the workload's definition.
+        if dx >= 0:
+            assoc = patch[: rh - dy, : rw - dx] if dx else patch[: rh - dy, :]
+            ref = patch[dy:, dx:]
+        else:
+            assoc = patch[: rh - dy, -dx:]
+            ref = patch[dy:, : rw + dx]
+        a = assoc.reshape(-1)
+        r = ref.reshape(-1)
+        pad = (-a.shape[0]) % copies  # static: pair count is shape-derived
+        if pad:
+            a = jnp.concatenate([a, jnp.full((pad,), -1, jnp.int32)])
+            r = jnp.concatenate([r, jnp.full((pad,), -1, jnp.int32)])
+        o_ref[0, 0, 0, k, :, :] = _vote_matmul(r, a, levels, copies)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("levels", "offsets", "copies", "interpret")
+)
+def glcm_window_pallas(
+    patches: jax.Array,
+    *,
+    levels: int,
+    offsets: tuple[tuple[int, int], ...],
+    copies: int = 1,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-window multi-offset GLCMs of an extracted patch grid (int32).
+
+    ``patches`` is (gh, gw, rh, rw) → (gh, gw, n_offsets, L, L), or a
+    batched (B, gh, gw, rh, rw) grid → (B, gh, gw, n_offsets, L, L). The
+    kernel grid is (B, gh, gw) — one launch computes the whole texture map,
+    with each window's patch DMA'd to VMEM and voted independently.
+    """
+    if patches.ndim not in (4, 5):
+        raise ValueError(
+            f"expected (gh, gw, rh, rw) or (B, gh, gw, rh, rw) patches, "
+            f"got {patches.shape}"
+        )
+    batched = patches.ndim == 5
+    p = patches.astype(jnp.int32)
+    if not batched:
+        p = p[None]
+    b, gh, gw, rh, rw = p.shape
+    for dy, dx in offsets:
+        if not (0 <= dy < rh) or abs(dx) >= rw:
+            raise ValueError(
+                f"offset (dy={dy}, dx={dx}) does not fit region ({rh}, {rw})"
+            )
+    n_off = len(offsets)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _window_kernel,
+            levels=levels,
+            copies=copies,
+            offsets=tuple(offsets),
+            rh=rh,
+            rw=rw,
+        ),
+        grid=(b, gh, gw),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, rh, rw), lambda bi, i, j: (bi, i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, 1, n_off, levels, levels),
+            lambda bi, i, j: (bi, i, j, 0, 0, 0),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, gh, gw, n_off, levels, levels), jnp.int32),
+        interpret=interpret,
+    )(p)
+    return out if batched else out[0]
 
 
 @functools.partial(

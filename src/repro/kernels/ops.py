@@ -23,12 +23,14 @@ from repro.kernels.glcm_kernel import (
     DEFAULT_COPIES,
     glcm_fused_pallas,
     glcm_vote_pallas,
+    glcm_window_pallas,
 )
 from repro.kernels.histogram_kernel import histogram_pallas
 
 __all__ = [
     "glcm_pallas",
     "glcm_pallas_multi",
+    "glcm_pallas_windowed",
     "histogram",
     "onehot_count",
     "should_interpret",
@@ -98,6 +100,31 @@ def glcm_pallas_multi(
         levels=levels,
         offsets=offsets,
         tile_h=tile_h,
+        copies=copies,
+        interpret=should_interpret(interpret),
+    )
+
+
+def glcm_pallas_windowed(
+    patches: jax.Array,
+    levels: int,
+    pairs: tuple[tuple[int, int], ...],
+    *,
+    copies: int = 1,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Per-window GLCMs of an extracted patch grid via the window kernel.
+
+    ``patches`` is (gh, gw, rh, rw) or (B, gh, gw, rh, rw) — the output of
+    ``repro.core.schemes.extract_regions`` — and the result appends
+    (len(pairs), L, L) to the grid axes. The (B, gh, gw) window grid rides
+    the kernel grid, so the full texture map is ONE kernel launch.
+    """
+    offsets = tuple(_ref.glcm_offsets(d, t) for d, t in pairs)
+    return glcm_window_pallas(
+        patches,
+        levels=levels,
+        offsets=offsets,
         copies=copies,
         interpret=should_interpret(interpret),
     )

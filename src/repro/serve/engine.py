@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.spec import GLCMSpec
 from repro.models import build_model
 
 
@@ -99,20 +100,26 @@ class GLCMServeConfig:
     batch_size: int = 8
     pairs: tuple[tuple[int, int], ...] = ((1, 0), (1, 45), (4, 0), (4, 45))
     scheme: str = "auto"          # any registered repro.core.backends scheme
-    features: bool = True         # Haralick-14 per offset; False → raw GLCMs
+    # Haralick features per offset (True = all 14, a name tuple selects a
+    # subset in that order); False → raw GLCMs.
+    features: bool | tuple[str, ...] = True
     quantize: str | None = "uniform"
     # Spec-native configuration: when given, ``spec`` overrides the
     # levels/pairs/scheme/quantize fields above (which remain as the
-    # keyword-compatible legacy surface).
-    spec: "object | None" = None
+    # keyword-compatible legacy surface). Region-structured specs
+    # (spec.region of "tiles"/"window") serve per-request texture maps.
+    spec: GLCMSpec | None = None
 
-    def glcm_spec(self):
+    def __post_init__(self):
+        if self.batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        if self.spec is not None and not isinstance(self.spec, GLCMSpec):
+            raise ValueError(f"cfg.spec must be a GLCMSpec, got {self.spec!r}")
+        self.glcm_spec()  # validate the legacy fields (or the explicit spec) now
+
+    def glcm_spec(self) -> GLCMSpec:
         """The GLCMSpec this engine serves (explicit ``spec`` wins)."""
-        from repro.core.spec import GLCMSpec
-
         if self.spec is not None:
-            if not isinstance(self.spec, GLCMSpec):
-                raise ValueError(f"cfg.spec must be a GLCMSpec, got {self.spec!r}")
             return self.spec
         return GLCMSpec(
             levels=self.levels,
@@ -133,8 +140,10 @@ class GLCMEngine:
     for a ticket that was never issued, raises. ``map(images)`` is the
     batch-submit convenience used by benchmarks.
 
-    Per request: Haralick features (len(pairs), 14) when ``cfg.features``,
-    else the raw GLCM stack (len(pairs), L, L).
+    Per request: Haralick features (len(pairs), n_feats) when
+    ``cfg.features``, else the raw GLCM stack (len(pairs), L, L); a
+    region-structured spec prefixes the per-request output with its
+    (gh, gw) tile/window grid (a texture map per request).
 
     All requests must share ``cfg.image_shape`` so one program serves every
     batch: the engine resolves its :class:`~repro.core.spec.GLCMSpec`
@@ -147,14 +156,13 @@ class GLCMEngine:
         from repro.core.plan import compile_plan
 
         self.cfg = cfg
-        if cfg.batch_size < 1:
-            raise ValueError("batch_size must be >= 1")
         self.spec = cfg.glcm_spec()
         h, w = cfg.image_shape
         self.plan = compile_plan(
             self.spec, (cfg.batch_size, h, w), features=cfg.features
         )
         self._pending: list[tuple[int, np.ndarray]] = []
+        self._pending_tickets: set[int] = set()   # O(1) queued-ticket lookup
         self._results: dict[int, np.ndarray] = {}
         self._next_ticket = 0
         self.batches_dispatched = 0
@@ -168,6 +176,7 @@ class GLCMEngine:
         ticket = self._next_ticket
         self._next_ticket += 1
         self._pending.append((ticket, image))
+        self._pending_tickets.add(ticket)
         if len(self._pending) == self.cfg.batch_size:
             self._dispatch()
         return ticket
@@ -177,8 +186,7 @@ class GLCMEngine:
             self._dispatch()
 
     def result(self, ticket: int) -> np.ndarray:
-        if ticket not in self._results and any(
-                t == ticket for t, _ in self._pending):
+        if ticket not in self._results and ticket in self._pending_tickets:
             self.flush()
         if ticket not in self._results:
             raise KeyError(
@@ -197,6 +205,7 @@ class GLCMEngine:
         tickets = [t for t, _ in self._pending]
         imgs = [im for _, im in self._pending]
         self._pending = []
+        self._pending_tickets.clear()
         # Pad to the fixed stack shape — one compiled program for all
         # traffic. len(imgs) <= batch_size here, so exactly one group.
         (stack, k), = coalesce_images(imgs, self.cfg.batch_size)

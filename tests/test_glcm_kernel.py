@@ -7,7 +7,11 @@ import pytest
 
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
-from repro.kernels.glcm_kernel import glcm_fused_pallas, glcm_vote_pallas
+from repro.kernels.glcm_kernel import (
+    glcm_fused_pallas,
+    glcm_vote_pallas,
+    glcm_window_pallas,
+)
 from repro.kernels.histogram_kernel import histogram_pallas
 
 from conftest import brute_force_glcm
@@ -105,6 +109,87 @@ def test_fused_kernel_copies_invariant(rng, copies):
         interpret=True,
     )
     np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+@pytest.mark.parametrize("levels", [8, 16])
+@pytest.mark.parametrize("grid", [(1, 1), (3, 2), (4, 4)])
+def test_window_kernel_per_patch_oracle(rng, levels, grid):
+    """Each (gh, gw) grid cell's output must be the brute-force GLCM of its
+    own patch — the window grid rides the kernel grid axes."""
+    gh, gw = grid
+    patches = rng.integers(0, levels, size=(gh, gw, 12, 16)).astype(np.int32)
+    pairs = ((1, 0), (1, 45), (2, 90))
+    offsets = tuple(kref.glcm_offsets(d, t) for d, t in pairs)
+    got = np.asarray(
+        glcm_window_pallas(
+            jnp.asarray(patches), levels=levels, offsets=offsets, interpret=True
+        )
+    )
+    assert got.shape == (gh, gw, 3, levels, levels)
+    for gi in range(gh):
+        for gj in range(gw):
+            for k, (d, t) in enumerate(pairs):
+                want = brute_force_glcm(patches[gi, gj], levels, d, t)
+                np.testing.assert_array_equal(
+                    got[gi, gj, k], want, err_msg=f"({gi},{gj}) d={d} θ={t}"
+                )
+
+
+def test_window_kernel_batched_grid(rng):
+    levels = 8
+    patches = rng.integers(0, levels, size=(2, 2, 3, 8, 8)).astype(np.int32)
+    got = np.asarray(
+        glcm_window_pallas(
+            jnp.asarray(patches), levels=levels, offsets=((1, 1),), interpret=True
+        )
+    )
+    assert got.shape == (2, 2, 3, 1, levels, levels)
+    for b in range(2):
+        want = np.asarray(
+            glcm_window_pallas(
+                jnp.asarray(patches[b]), levels=levels, offsets=((1, 1),),
+                interpret=True,
+            )
+        )
+        np.testing.assert_array_equal(got[b], want)
+
+
+@pytest.mark.parametrize("copies", [1, 2, 4])
+def test_window_kernel_copies_invariant(rng, copies):
+    levels = 8
+    patches = rng.integers(0, levels, size=(2, 3, 10, 10)).astype(np.int32)
+    base = glcm_window_pallas(
+        jnp.asarray(patches), levels=levels, offsets=((1, -1),), copies=1,
+        interpret=True,
+    )
+    got = glcm_window_pallas(
+        jnp.asarray(patches), levels=levels, offsets=((1, -1),), copies=copies,
+        interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+def test_window_kernel_bad_args():
+    with pytest.raises(ValueError, match="patches"):
+        glcm_window_pallas(jnp.zeros((4, 4), jnp.int32), levels=8,
+                           offsets=((1, 0),), interpret=True)
+    with pytest.raises(ValueError, match="does not fit"):
+        glcm_window_pallas(jnp.zeros((2, 2, 4, 4), jnp.int32), levels=8,
+                           offsets=((5, 0),), interpret=True)
+
+
+def test_ops_windowed_wrapper_matches_multi(rng):
+    """glcm_pallas_windowed over a 1×1 grid == glcm_pallas_multi of the image."""
+    levels = 8
+    img = rng.integers(0, levels, size=(16, 24)).astype(np.int32)
+    pairs = ((1, 0), (1, 135))
+    got = np.asarray(
+        kops.glcm_pallas_windowed(jnp.asarray(img)[None, None], levels, pairs,
+                                  interpret=True)
+    )
+    want = np.asarray(kops.glcm_pallas_multi(jnp.asarray(img), levels, pairs,
+                                             interpret=True))
+    np.testing.assert_array_equal(got[0, 0], want)
 
 
 @pytest.mark.parametrize("levels", [8, 32, 128])

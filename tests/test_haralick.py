@@ -1,4 +1,5 @@
-"""Haralick-14 features: independent-numpy cross-check + analytic cases."""
+"""Haralick-14 features: independent-numpy cross-check, analytic cases,
+hand-computed golden values, invariance properties, and ``select=``."""
 
 import jax.numpy as jnp
 import numpy as np
@@ -109,3 +110,129 @@ def test_normalize():
     g = jnp.asarray(np.random.default_rng(0).integers(1, 9, (8, 8)), jnp.float32)
     n = normalize_glcm(g)
     np.testing.assert_allclose(float(n.sum()), 1.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Golden values: a hand-computed 4×4 GLCM (worked out on paper, not derived
+# from any implementation)
+# ---------------------------------------------------------------------------
+
+# Count matrix (12 pairs total):       normalized p = counts / 12:
+#   [[2, 0, 0, 0],                       px = (1/6, 1/3, 1/3, 1/6)
+#    [2, 2, 0, 0],                       py = (5/12, 1/6, 1/3, 1/12)
+#    [1, 0, 3, 0],
+#    [0, 0, 1, 1]]
+GOLDEN_COUNTS = np.array(
+    [[2, 0, 0, 0], [2, 2, 0, 0], [1, 0, 3, 0], [0, 0, 1, 1]], np.float64
+)
+
+# Hand derivations:
+#   ASM      = 3·(1/6)² + 3·(1/12)² + (1/4)²                    = 1/6
+#   Contrast = 1²·(2/12) + 2²·(1/12) + 1²·(1/12)                = 7/12
+#   IDM      = 8/12 + (3/12)/2 + (1/12)/5                       = 97/120
+#   SumAvg   = Σ k·p_{x+y}(k) = (1·2 + 2·3 + 4·3 + 5·1 + 6·1)/12 = 31/12
+#   Entropy  = −[3·(1/6)ln(1/6) + 3·(1/12)ln(1/12) + (1/4)ln(1/4)]
+#   Corr     = (Σij·p − μxμy)/(σxσy),  Σij·p = 29/12, μx = 3/2,
+#              μy = 13/12, σx² = 11/12, σy² = 1860/1728
+GOLDEN = {
+    "asm_energy": 1 / 6,
+    "contrast": 7 / 12,
+    "inverse_difference_moment": 97 / 120,
+    "sum_average": 31 / 12,
+    "entropy": -(
+        3 * (1 / 6) * np.log(1 / 6)
+        + 3 * (1 / 12) * np.log(1 / 12)
+        + (1 / 4) * np.log(1 / 4)
+    ),
+    "correlation": (29 / 12 - (3 / 2) * (13 / 12))
+    / np.sqrt((11 / 12) * (1860 / 1728)),
+}
+
+
+def test_golden_hand_computed_4x4():
+    got = dict(
+        zip(FEATURE_NAMES, np.asarray(haralick_features(jnp.asarray(GOLDEN_COUNTS))))
+    )
+    for name, want in GOLDEN.items():
+        np.testing.assert_allclose(got[name], want, rtol=1e-5, err_msg=name)
+
+
+def test_golden_diag_f14_is_one():
+    # Two perfectly correlated levels: Q has eigenvalues {1, 1} → f14 = 1.
+    p = np.zeros((4, 4))
+    p[0, 0] = p[3, 3] = 0.5
+    got = dict(zip(FEATURE_NAMES, np.asarray(haralick_features(jnp.asarray(p)))))
+    np.testing.assert_allclose(got["max_correlation_coefficient"], 1.0, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Invariance properties
+# ---------------------------------------------------------------------------
+
+
+def test_symmetric_glcm_features_transpose_invariant(rng):
+    """P symmetric ⇒ px == py, so every feature — f3 (correlation) included —
+    must be stable under transposing the input."""
+    c = rng.integers(0, 20, (8, 8)).astype(np.float64)
+    sym = c + c.T
+    a = np.asarray(haralick_features(jnp.asarray(sym)))
+    b = np.asarray(haralick_features(jnp.asarray(sym.T)))
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-9)
+
+
+def test_scale_invariance_of_normalization(rng):
+    """Features depend on p = counts/sum — scaling all counts is a no-op."""
+    c = rng.integers(1, 9, (8, 8)).astype(np.float64)
+    a = np.asarray(haralick_features(jnp.asarray(c)))
+    b = np.asarray(haralick_features(jnp.asarray(37.0 * c)))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# select= (subset computation skipping the f14 eigendecomposition)
+# ---------------------------------------------------------------------------
+
+
+def test_select_permutation_consistency(rng):
+    counts = rng.integers(0, 50, (3, 8, 8)).astype(np.float64) + np.eye(8)
+    full = np.asarray(haralick_features(jnp.asarray(counts)))
+    order = ("entropy", "asm_energy", "max_correlation_coefficient", "contrast")
+    got = np.asarray(haralick_features(jnp.asarray(counts), select=order))
+    assert got.shape == (3, len(order))
+    for col, name in enumerate(order):
+        np.testing.assert_allclose(
+            got[:, col], full[:, FEATURE_NAMES.index(name)], rtol=1e-6,
+            err_msg=name,
+        )
+
+
+def test_select_every_single_feature_matches_full(rng):
+    counts = rng.integers(0, 50, (8, 8)).astype(np.float64) + np.eye(8)
+    full = np.asarray(haralick_features(jnp.asarray(counts)))
+    for k, name in enumerate(FEATURE_NAMES):
+        got = np.asarray(haralick_features(jnp.asarray(counts), select=(name,)))
+        np.testing.assert_allclose(got, full[k : k + 1], rtol=1e-6, err_msg=name)
+
+
+def test_select_skips_eigvalsh(rng):
+    """Without max_correlation_coefficient the traced program must contain no
+    eigendecomposition (the O(L³) term texture maps cannot afford)."""
+    import jax
+
+    g = jnp.asarray(rng.integers(1, 9, (8, 8)), jnp.float32)
+    no_f14 = jax.make_jaxpr(
+        lambda p: haralick_features(p, select=("contrast", "entropy"))
+    )(g)
+    assert "eigh" not in str(no_f14)
+    with_f14 = jax.make_jaxpr(
+        lambda p: haralick_features(p, select=("max_correlation_coefficient",))
+    )(g)
+    assert "eigh" in str(with_f14)
+
+
+def test_select_validation():
+    g = jnp.ones((4, 4))
+    with pytest.raises(ValueError, match="unknown Haralick feature"):
+        haralick_features(g, select=("sharpness",))
+    with pytest.raises(ValueError, match="no features"):
+        haralick_features(g, select=())

@@ -1,0 +1,349 @@
+"""Region-structured GLCM (spec.region = "tiles"/"window") — texture maps.
+
+The contract under test: for EVERY registered scheme, the per-region result
+equals looping ``glcm()`` over the extracted patches (the oracle the ISSUE
+names), through every entry point (glcm/glcm_features, GLCMEngine,
+glcm_feature_stream, glcm_sharded_batch); ``region="global"`` stays
+bit-exact with the pre-region API.
+"""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.glcm import glcm, glcm_features
+from repro.core.plan import compile_plan
+from repro.core.schemes import extract_regions
+from repro.core.spec import GLCMSpec
+from repro.serve.engine import GLCMEngine, GLCMServeConfig
+
+from conftest import brute_force_glcm
+
+SCHEMES = ("scatter", "onehot", "blocked", "pallas", "pallas_fused")
+
+# (region kwargs, expected grid for a 32x32 image)
+REGIONS = [
+    (dict(region="tiles", region_shape=(16, 16)), (2, 2)),
+    (dict(region="tiles", region_shape=(8, 16)), (4, 2)),
+    (dict(region="window", region_shape=(8, 8), region_stride=(8, 8)), (4, 4)),
+    (dict(region="window", region_shape=(16, 16), region_stride=(8, 8)), (3, 3)),
+]
+
+
+@pytest.fixture
+def stack(rng):
+    return jnp.asarray(rng.integers(0, 8, size=(2, 32, 32)), jnp.int32)
+
+
+def patch_loop_oracle(img: np.ndarray, levels, pairs, shape, stride) -> np.ndarray:
+    """The ISSUE's oracle: extract patches, brute-force each one in a loop."""
+    patches = np.asarray(extract_regions(jnp.asarray(img), shape, stride))
+    gh, gw = patches.shape[:2]
+    out = np.zeros((gh, gw, len(pairs), levels, levels), np.int64)
+    for gi in range(gh):
+        for gj in range(gw):
+            for k, (d, t) in enumerate(pairs):
+                out[gi, gj, k] = brute_force_glcm(patches[gi, gj], levels, d, t)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Spec validation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "kwargs",
+    [
+        dict(region="patches"),                                 # unknown mode
+        dict(region="global", region_shape=(8, 8)),             # shape w/o mode
+        dict(region="global", region_stride=(1, 1)),
+        dict(region="tiles"),                                   # missing shape
+        dict(region="window"),
+        dict(region="tiles", region_shape=(8, 8), region_stride=(4, 4)),
+        dict(region="tiles", region_shape=0),                   # bad size
+        dict(region="window", region_shape=(8, 8), region_stride=0),
+        dict(region="window", region_shape="big"),              # not a shape
+        # offset does not fit inside the region
+        dict(region="tiles", region_shape=(4, 4), pairs=((4, 90),)),
+        dict(region="window", region_shape=(8, 4), pairs=((4, 45),)),
+    ],
+)
+def test_region_spec_validation_errors(kwargs):
+    kwargs.setdefault("pairs", ((1, 0),))
+    with pytest.raises(ValueError):
+        GLCMSpec(levels=8, **kwargs)
+
+
+def test_region_spec_canonicalization_and_grid():
+    spec = GLCMSpec(levels=8, region="tiles", region_shape=16)
+    assert spec.region_shape == (16, 16) and spec.strides == (16, 16)
+    win = GLCMSpec(levels=8, region="window", region_shape=8)
+    assert win.region_stride == (1, 1)          # dense texture map by default
+    assert win.region_grid(32, 32) == (25, 25)
+    assert spec.region_grid(32, 48) == (2, 3)
+    assert GLCMSpec(levels=8).region_grid(32, 32) == ()
+    with pytest.raises(ValueError, match="not divisible"):
+        spec.region_grid(40, 32)
+    with pytest.raises(ValueError, match="exceeds"):
+        win.region_grid(4, 32)
+
+
+def test_global_spec_unchanged_by_region_fields():
+    # region="global" is the default: specs (and so plan-cache keys) built by
+    # the legacy API are EQUAL to explicitly-global ones — bit-exact reuse.
+    assert GLCMSpec(levels=8) == GLCMSpec(levels=8, region="global")
+
+
+def test_tiles_must_divide_image_at_plan_time():
+    spec = GLCMSpec(levels=8, region="tiles", region_shape=(12, 12))
+    with pytest.raises(ValueError, match="not divisible"):
+        compile_plan(spec, (32, 32))
+
+
+def test_window_must_fit_image_at_plan_time():
+    spec = GLCMSpec(levels=8, region="window", region_shape=(64, 64))
+    with pytest.raises(ValueError, match="exceeds"):
+        compile_plan(spec, (2, 32, 32))
+
+
+# ---------------------------------------------------------------------------
+# Region extraction
+# ---------------------------------------------------------------------------
+
+
+def test_extract_regions_tiles_is_partition(rng):
+    img = rng.integers(0, 256, (2, 24, 32)).astype(np.int32)
+    out = np.asarray(extract_regions(jnp.asarray(img), (8, 16), (8, 16)))
+    assert out.shape == (2, 3, 2, 8, 16)
+    for gi in range(3):
+        for gj in range(2):
+            np.testing.assert_array_equal(
+                out[:, gi, gj], img[:, gi * 8 : (gi + 1) * 8, gj * 16 : (gj + 1) * 16]
+            )
+
+
+def test_extract_regions_overlapping_windows(rng):
+    img = rng.integers(0, 256, (16, 16)).astype(np.int32)
+    out = np.asarray(extract_regions(jnp.asarray(img), (8, 8), (4, 4)))
+    assert out.shape == (3, 3, 8, 8)
+    for gi in range(3):
+        for gj in range(3):
+            np.testing.assert_array_equal(
+                out[gi, gj], img[gi * 4 : gi * 4 + 8, gj * 4 : gj * 4 + 8]
+            )
+
+
+# ---------------------------------------------------------------------------
+# Oracle: every scheme, tiles + windows, unbatched + batched
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("region_kw,grid", REGIONS)
+def test_region_matches_patch_loop_oracle(stack, scheme, region_kw, grid):
+    levels = 8
+    pairs = ((1, 0), (1, 45))
+    spec = GLCMSpec(levels=levels, pairs=pairs, scheme=scheme, num_blocks=2,
+                    **region_kw)
+    got = np.asarray(compile_plan(spec, tuple(stack.shape))(stack))
+    gh, gw = grid
+    assert got.shape == (stack.shape[0], gh, gw, len(pairs), levels, levels)
+    shape = spec.region_shape
+    for b in range(stack.shape[0]):
+        want = patch_loop_oracle(
+            np.asarray(stack[b]), levels, pairs, shape, spec.strides
+        )
+        np.testing.assert_array_equal(got[b], want, err_msg=f"{scheme} image {b}")
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_region_unbatched_equals_batched_slice(stack, scheme):
+    levels = 8
+    got1 = np.asarray(
+        glcm(stack[0], levels, 1, 45, scheme=scheme, num_blocks=2,
+             region="tiles", region_shape=16)
+    )
+    gotb = np.asarray(
+        glcm(stack, levels, 1, 45, scheme=scheme, num_blocks=2,
+             region="tiles", region_shape=16)
+    )
+    assert got1.shape == (2, 2, levels, levels)
+    np.testing.assert_array_equal(gotb[0], got1)
+
+
+def test_region_symmetric_normalize(stack):
+    got = np.asarray(
+        glcm(stack, 8, 1, 0, scheme="onehot", region="tiles", region_shape=8,
+             symmetric=True, normalize=True)
+    )
+    assert got.shape == (2, 4, 4, 8, 8)
+    np.testing.assert_allclose(got, np.swapaxes(got, -1, -2))
+    np.testing.assert_allclose(got.sum(axis=(-2, -1)), 1.0, rtol=1e-6)
+
+
+def test_blocked_fallback_validates_patch_height():
+    # The blocked scheme's divisibility check runs against the REGION height
+    # (the shape it actually serves), not the image height.
+    spec = GLCMSpec(levels=8, scheme="blocked", num_blocks=4,
+                    region="tiles", region_shape=(6, 8))
+    with pytest.raises(ValueError, match="not divisible"):
+        compile_plan(spec, (24, 32))
+
+
+# ---------------------------------------------------------------------------
+# Entry points: glcm_features, engine, stream (sharded in subprocess below)
+# ---------------------------------------------------------------------------
+
+
+def test_glcm_features_region_shapes_and_oracle(rng):
+    img = jnp.asarray(rng.uniform(0, 255, (32, 32)), jnp.float32)
+    got = np.asarray(
+        glcm_features(img, 8, pairs=((1, 0), (1, 90)), scheme="onehot",
+                      region="window", region_shape=16, region_stride=8)
+    )
+    assert got.shape == (3, 3, 2, 14)
+    # each window's features == features of that patch through the global API
+    from repro.core.quantize import quantize_uniform
+
+    q = quantize_uniform(img, 8)
+    patches = np.asarray(extract_regions(q, (16, 16), (8, 8)))
+    want = np.asarray(
+        glcm_features(jnp.asarray(patches[1, 2]), 8, pairs=((1, 0), (1, 90)),
+                      scheme="onehot", quantize=None)
+    )
+    np.testing.assert_allclose(got[1, 2], want, rtol=1e-5, atol=1e-6)
+
+
+def test_glcm_features_select_subset(rng):
+    img = jnp.asarray(rng.uniform(0, 255, (16, 16)), jnp.float32)
+    full = np.asarray(glcm_features(img, 8))
+    sub = np.asarray(glcm_features(img, 8, select=("entropy", "contrast")))
+    assert sub.shape == full.shape[:-1] + (2,)
+    np.testing.assert_allclose(sub[..., 0], full[..., 8], rtol=1e-6)
+    np.testing.assert_allclose(sub[..., 1], full[..., 1], rtol=1e-6)
+
+
+def test_engine_serves_region_spec(rng):
+    spec = GLCMSpec(levels=8, pairs=((1, 0),), scheme="onehot",
+                    quantize="uniform", region="tiles", region_shape=8)
+    eng = GLCMEngine(GLCMServeConfig(image_shape=(16, 16), batch_size=2,
+                                     features=False, spec=spec))
+    imgs = [rng.uniform(0, 255, (16, 16)).astype(np.float32) for _ in range(3)]
+    out = eng.map(imgs)
+    assert out.shape == (3, 2, 2, 1, 8, 8)
+    want = np.asarray(
+        glcm(jnp.asarray(imgs[2]), 8, 1, 0, scheme="onehot",
+             quantize="uniform", region="tiles", region_shape=8)
+    )
+    np.testing.assert_array_equal(out[2, :, :, 0], want)
+
+
+def test_stream_yields_texture_maps(rng):
+    from repro.core.pipeline import glcm_feature_stream
+
+    spec = GLCMSpec(levels=8, pairs=((1, 0), (1, 45)), scheme="onehot",
+                    quantize="uniform", vrange=(0.0, 255.0),
+                    region="window", region_shape=8, region_stride=8)
+    imgs = [rng.integers(0, 256, (16, 16)).astype(np.float32) for _ in range(3)]
+    feats = [np.asarray(f) for f in glcm_feature_stream(imgs, spec=spec,
+                                                        batch_size=2)]
+    assert len(feats) == 3 and feats[0].shape == (2, 2, 2, 14)
+    # streamed == direct plan execution per image
+    plan = compile_plan(spec, (16, 16), features=True)
+    for im, f in zip(imgs, feats):
+        np.testing.assert_allclose(f, np.asarray(plan(jnp.asarray(im))),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_engine_pending_ticket_protocol(rng):
+    eng = GLCMEngine(GLCMServeConfig(levels=8, image_shape=(16, 16),
+                                     batch_size=4))
+    t0 = eng.submit(rng.uniform(0, 255, (16, 16)).astype(np.float32))
+    assert eng.result(t0).shape == (4, 14)      # flushes the partial batch
+    with pytest.raises(KeyError):
+        eng.result(t0)                          # exactly-once retrieval
+    with pytest.raises(KeyError):
+        eng.result(12345)                       # never issued
+
+
+def test_serve_config_validates_eagerly():
+    with pytest.raises(ValueError):
+        GLCMServeConfig(batch_size=0)
+    with pytest.raises(ValueError):
+        GLCMServeConfig(spec="onehot")          # not a GLCMSpec
+    with pytest.raises(ValueError):
+        GLCMServeConfig(pairs=())               # legacy fields validated too
+
+
+# ---------------------------------------------------------------------------
+# Sharded texture maps: the window grid (not rows) is the sharded axis
+# ---------------------------------------------------------------------------
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+SHARDED_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core.distributed import glcm_sharded, glcm_sharded_batch
+    from repro.core.glcm import glcm
+    from repro.core.spec import GLCMSpec
+    from repro.launch.mesh import make_host_mesh
+
+    assert len(jax.devices()) == 8, jax.devices()
+    rng = np.random.default_rng(0)
+    imgs = jnp.asarray(rng.integers(0, 8, size=(4, 40, 32)), jnp.int32)
+
+    # tiles over a (data, model) mesh: batch x grid-row sharding, no halo
+    mesh = make_host_mesh((4, 2), ("data", "model"))
+    spec = GLCMSpec(levels=8, pairs=((1, 45),), region="tiles",
+                    region_shape=(10, 8))
+    got = np.asarray(glcm_sharded_batch(imgs, mesh=mesh, spec=spec))
+    want = np.asarray(glcm(imgs, 8, 1, 45, scheme="onehot", region="tiles",
+                           region_shape=(10, 8))).astype(np.int32)
+    assert got.shape == (4, 4, 4, 8, 8), got.shape
+    np.testing.assert_array_equal(got, want)
+
+    # overlapping windows, grid rows sharded over the flat 8-device axis
+    mesh1 = make_host_mesh((8,), ("data",))
+    wspec = GLCMSpec(levels=8, pairs=((2, 90),), region="window",
+                     region_shape=(12, 16), region_stride=(4, 8))
+    img = imgs[0]
+    got = np.asarray(glcm_sharded(img, mesh=mesh1, spec=wspec))
+    want = np.asarray(glcm(img, 8, 2, 90, scheme="onehot", region="window",
+                           region_shape=(12, 16), region_stride=(4, 8)))
+    assert got.shape == (8, 3, 8, 8), got.shape
+    np.testing.assert_array_equal(got, want.astype(np.int32))
+
+    # indivisible window grid is rejected (gh = (40-16)//12+1 = 3, shards 2)
+    try:
+        glcm_sharded_batch(imgs, mesh=mesh, spec=GLCMSpec(
+            levels=8, pairs=((1, 0),), region="window", region_shape=(16, 8),
+            region_stride=(12, 8)))
+        raise SystemExit("expected indivisible-grid ValueError")
+    except ValueError:
+        pass
+    print("REGION-SHARDED-OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_region_grid_8_devices():
+    proc = subprocess.run(
+        [sys.executable, "-c", SHARDED_SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"},
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "REGION-SHARDED-OK" in proc.stdout

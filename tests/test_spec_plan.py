@@ -14,7 +14,12 @@ import pytest
 
 from repro.core import backends
 from repro.core.glcm import glcm, glcm_features
-from repro.core.plan import compile_plan, plan_cache_stats
+from repro.core.plan import (
+    compile_plan,
+    plan_cache_clear,
+    plan_cache_limit,
+    plan_cache_stats,
+)
 from repro.core.spec import GLCMSpec
 from repro.serve.engine import GLCMEngine, GLCMServeConfig
 
@@ -140,6 +145,63 @@ def test_repeated_requests_do_not_retrace(rng):
     assert stats["misses"] == misses0
     if hasattr(plan.fn, "_cache_size"):       # jit traced exactly once
         assert plan.fn._cache_size() == 1
+
+
+def test_plan_cache_lru_bound_and_evictions():
+    """The cache is a bounded LRU: a long-lived server seeing many shapes
+    must not leak compiled programs, and evictions are surfaced in stats."""
+    old_limit = plan_cache_limit()
+    plan_cache_clear()
+    spec = GLCMSpec(levels=8, scheme="onehot")
+    try:
+        assert plan_cache_limit(2) == 2
+        compile_plan(spec, (8, 8))
+        p10 = compile_plan(spec, (8, 10))
+        p12 = compile_plan(spec, (8, 12))          # evicts (8, 8)
+        stats = plan_cache_stats()
+        assert stats == {"hits": 0, "misses": 3, "evictions": 1,
+                         "size": 2, "limit": 2}
+        # (8, 8) was evicted → recompiled fresh; this in turn evicts (8, 10)
+        compile_plan(spec, (8, 8))
+        assert plan_cache_stats()["evictions"] == 2
+        # LRU order honors USE, not insertion: touch (8, 12), then insert —
+        # the untouched (8, 8) is the victim and (8, 12) survives.
+        assert compile_plan(spec, (8, 12)) is p12
+        compile_plan(spec, (8, 14))
+        assert compile_plan(spec, (8, 12)) is p12             # still cached
+        assert compile_plan(spec, (8, 10)) is not p10         # evicted earlier
+        # shrinking the limit evicts immediately
+        plan_cache_limit(1)
+        assert plan_cache_stats()["size"] == 1
+        with pytest.raises(ValueError, match=">= 1"):
+            plan_cache_limit(0)
+    finally:
+        plan_cache_limit(old_limit)
+        plan_cache_clear()
+
+
+def test_plan_features_tuple_is_part_of_key(rng):
+    img = jnp.asarray(rng.integers(0, 8, (16, 16)), jnp.int32)
+    spec = GLCMSpec(levels=8, scheme="onehot")
+    full = compile_plan(spec, (16, 16), features=True)
+    sub = compile_plan(spec, (16, 16), features=("contrast", "entropy"))
+    assert full is not sub
+    f = np.asarray(full(img))
+    s = np.asarray(sub(img))
+    assert f.shape[-1] == 14 and s.shape[-1] == 2
+    np.testing.assert_allclose(s[..., 0], f[..., 1], rtol=1e-6)   # contrast
+    np.testing.assert_allclose(s[..., 1], f[..., 8], rtol=1e-6)   # entropy
+    with pytest.raises(ValueError, match="unknown Haralick feature"):
+        compile_plan(spec, (16, 16), features=("blur",))
+    with pytest.raises(ValueError, match="selects nothing"):
+        compile_plan(spec, (16, 16), features=())
+
+
+def test_region_grid_capability_declared():
+    assert backends.get_backend("onehot").caps.region_grid
+    assert backends.get_backend("pallas_fused").caps.region_grid
+    assert not backends.get_backend("scatter").caps.region_grid
+    assert backends.get_backend("scatter").region_compute is None
 
 
 def test_engine_and_wrapper_share_plan_cache():
