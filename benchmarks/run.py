@@ -16,10 +16,11 @@ import time
 import jax
 
 from benchmarks import common
+from repro.core.plan import plan_cache_stats
 
 MODULES = ("table2_scheme1", "table3_scheme2", "table4_transfer",
            "fig4_async", "fig5_speedup", "moe_dispatch", "batch_throughput",
-           "texture_map")
+           "texture_map", "volume_throughput")
 
 
 def _batch_speedups(rows: list[dict]) -> dict:
@@ -40,6 +41,22 @@ def _serial_speedups(rows: list[dict]) -> dict:
         for r in rows
         if "speedup_vs_serial" in r
     }
+
+
+def _volume_speedups(rows: list[dict]) -> dict:
+    """regime/scheme → fused-3-D-plan-vs-slice-loop speedup (plus the
+    2-D-equivalent voxels/sec for every volumetric row)."""
+    out: dict = {}
+    for r in rows:
+        if "speedup_vs_slice_loop" in r:
+            out[f"{r['regime']}/{r['scheme']}"] = round(
+                r["speedup_vs_slice_loop"], 3
+            )
+        if r.get("directions") == "all13":
+            out[f"{r['regime']}/{r['scheme']}/all13_voxels_per_sec"] = r[
+                "voxels_per_sec"
+            ]
+    return out
 
 
 def _texture_map_speedups(rows: list[dict]) -> dict:
@@ -79,6 +96,15 @@ def main() -> None:
         }
         print(f"# {mod_name} done in {dt:.1f}s", file=sys.stderr)
 
+    # The whole run shares ONE plan cache: its hit rate is the figure of
+    # merit for the serving layer (every repeat shape must be a hit).
+    cache = plan_cache_stats()
+    print(
+        f"# plan cache: {cache['hits']} hits / {cache['misses']} misses "
+        f"(hit_rate={cache['hit_rate']:.3f}, evictions={cache['evictions']})",
+        file=sys.stderr,
+    )
+
     if args.out:
         payload = {
             "benchmark": "glcm",
@@ -86,10 +112,17 @@ def main() -> None:
             "jax_version": jax.__version__,
             "jax_backend": jax.default_backend(),
             "modules": modules_run,
+            "plan_cache": {
+                "hits": cache["hits"],
+                "misses": cache["misses"],
+                "evictions": cache["evictions"],
+                "hit_rate": round(cache["hit_rate"], 4),
+            },
             "speedups": {
                 "batch_vs_b1": _batch_speedups(common.RESULTS),
                 "vs_serial_cpu": _serial_speedups(common.RESULTS),
                 "texture_map_vs_loop": _texture_map_speedups(common.RESULTS),
+                "volume_throughput": _volume_speedups(common.RESULTS),
             },
             "rows": common.RESULTS,
         }

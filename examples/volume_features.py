@@ -1,0 +1,87 @@
+"""Volumetric Haralick features — 3-D co-occurrence end to end.
+
+    PYTHONPATH=src python examples/volume_features.py
+
+Builds a synthetic CT-like stack (a smooth tissue field with a bright
+ellipsoidal "lesion" whose texture is rough) and computes Haralick
+features over ALL 13 unique 3-D directions with ONE compiled program
+(``GLCMSpec(ndim=3)`` → ``compile_plan``). The per-direction printout
+shows what no per-slice 2-D pipeline can see: the inter-slice (dz = +1)
+directions respond to the volume's axial structure, and a tiled
+(region="tiles") pass localizes the lesion in 3-D.
+"""
+
+import numpy as np
+
+from repro.core.plan import compile_plan
+from repro.core.schemes import VOLUME_PAIRS
+from repro.core.spec import GLCMSpec
+from repro.data.images import smooth_volume
+from repro.kernels.ref import DIRECTIONS_3D
+
+SHAPE = (32, 64, 64)      # D, H, W — a small CT-like stack
+LEVELS = 16
+
+
+def make_volume(rng: np.random.Generator) -> np.ndarray:
+    """Smooth 'tissue' + one bright, rough ellipsoidal 'lesion'."""
+    vol = smooth_volume(SHAPE, seed=0).astype(np.float32)
+    d, h, w = SHAPE
+    zz, yy, xx = np.mgrid[0:d, 0:h, 0:w].astype(np.float32)
+    # Ellipsoid centered in the lower-right octant, squashed along depth.
+    mask = (
+        ((zz - 0.65 * d) / (0.18 * d)) ** 2
+        + ((yy - 0.60 * h) / (0.22 * h)) ** 2
+        + ((xx - 0.62 * w) / (0.22 * w)) ** 2
+    ) < 1.0
+    lesion = 180 + 60 * rng.random(SHAPE).astype(np.float32)  # bright + rough
+    return np.where(mask, lesion, vol)
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    vol = make_volume(rng)
+
+    # One program: quantize → 13-direction 3-D GLCM → Haralick features.
+    spec = GLCMSpec(
+        levels=LEVELS, pairs=VOLUME_PAIRS, quantize="uniform",
+        vrange=(0.0, 255.0), ndim=3,
+    )
+    plan = compile_plan(spec, vol.shape, features=("contrast", "entropy"))
+    feats = np.asarray(plan(vol))          # (13, 2)
+    print(f"{SHAPE} volume, {LEVELS} levels -> features {feats.shape} "
+          f"(13 directions x [contrast, entropy])\n")
+    print("dir  (dz,dy,dx)   contrast   entropy")
+    for k, off in enumerate(DIRECTIONS_3D):
+        tag = "in-plane " if off[0] == 0 else "inter-slice"
+        print(f"{k:3d}  {str(off):11s} {feats[k, 0]:9.3f} {feats[k, 1]:9.3f}"
+              f"   {tag}")
+    inplane = feats[:4, 0].mean()
+    inter = feats[4:, 0].mean()
+    print(f"\nmean contrast  in-plane: {inplane:.3f}   "
+          f"inter-slice: {inter:.3f}  (axial anisotropy "
+          f"{inter / max(inplane, 1e-9):.2f}x)")
+
+    # Localize the lesion: one GLCM per (8, 16, 16) tile, entropy per tile.
+    tspec = spec.replace(region="tiles", region_shape=(8, 16, 16))
+    tplan = compile_plan(tspec, vol.shape, features=("entropy",))
+    tmap = np.asarray(tplan(vol))          # (gd, gh, gw, 13, 1)
+    emap = tmap[..., 0].mean(axis=-1)      # direction-averaged entropy
+    gd, gh, gw = emap.shape
+    print(f"\nper-tile entropy map ({gd}x{gh}x{gw} tiles of 8x16x16), "
+          f"depth-slab maxima:")
+    ramp = " .:-=+*#%@"
+    lo, hi = float(emap.min()), float(emap.max())
+    for iz in range(gd):
+        rows = []
+        for iy in range(gh):
+            idx = ((emap[iz, iy] - lo) / max(hi - lo, 1e-9)
+                   * (len(ramp) - 1)).astype(int)
+            rows.append("".join(ramp[i] for i in idx))
+        print(f"  slab {iz}: " + "  ".join(rows))
+    peak = tuple(int(i) for i in np.unravel_index(emap.argmax(), emap.shape))
+    print(f"\nhighest-entropy tile at (slab, row, col) = {peak} — the lesion.")
+
+
+if __name__ == "__main__":
+    main()

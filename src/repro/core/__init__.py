@@ -3,10 +3,12 @@
 Execution layer (spec → plan → backend):
   spec        GLCMSpec, the frozen description of one GLCM workload —
               including its region structure ("global" per-image GLCMs, or
-              "tiles"/"window" per-region texture maps)
+              "tiles"/"window" per-region texture maps) and spatial rank
+              (ndim=2 images, ndim=3 volumes with 13 unique 3-D directions)
   backends    the scheme registry (scatter / onehot / blocked / pallas /
-              pallas_fused) — the ONLY place scheme names are dispatched;
-              region-aware via native paths or the patch-extraction fallback
+              pallas_fused / pallas_volume) — the ONLY place scheme names
+              are dispatched; region-aware via native paths or the
+              patch-extraction fallback; volumetric by capability
   plan        compile_plan: spec + shape → one cached, jitted program
               (bounded LRU; (B, *grid, n_pairs, L, L) region contract)
 
@@ -31,7 +33,7 @@ from repro.core import (
     schemes,
     spec,
 )
-from repro.core.glcm import PAPER_PAIRS, glcm, glcm_features
+from repro.core.glcm import PAPER_PAIRS, VOLUME_PAIRS, glcm, glcm_features
 from repro.core.plan import compile_plan
 from repro.core.spec import GLCMSpec
 
@@ -41,6 +43,7 @@ __all__ = [
     "GLCMSpec",
     "compile_plan",
     "PAPER_PAIRS",
+    "VOLUME_PAIRS",
     "spec",
     "plan",
     "backends",

@@ -4,7 +4,8 @@ Each backend implements
 
     compute(img_batch, spec) -> (B, n_pairs, L, L) float32 counts
 
-where ``img_batch`` is an already-quantized (B, H, W) int32 stack and
+where ``img_batch`` is an already-quantized int32 stack — (B, H, W) for
+``spec.ndim == 2``, (B, D, H, W) for volumetric ``ndim == 3`` specs — and
 ``spec`` is a resolved :class:`repro.core.spec.GLCMSpec` (no "auto").
 Quantization, symmetric/normalize post-processing and un/batching are the
 *plan's* job (``core.plan.compile_plan``) — backends only count votes, so a
@@ -12,9 +13,9 @@ new strategy is one ``register()`` call, not three ``if/elif`` edits.
 
 Capabilities declare what each strategy can do (multi-offset fusion in a
 single device pass, batch carried as a kernel grid axis, TPU-targeted
-compilation, sentinel-masked partials for halo-exchange sharding) so the
-"auto" resolver and the distributed layer can pick by *capability* instead
-of by name.
+compilation, sentinel-masked partials for halo-exchange sharding, native
+region grids, volumetric 3-D inputs) so the "auto" resolver and the
+distributed layer can pick by *capability* instead of by name.
 
 Scheme-name dispatch lives HERE and only here: ``glcm``/``glcm_features``,
 ``serve.GLCMEngine``, ``core.pipeline.glcm_feature_stream`` and
@@ -55,13 +56,16 @@ __all__ = [
 class Capabilities:
     """What a backend's strategy supports (declared, not probed)."""
 
-    multi_offset_fused: bool = False  # all (d, θ) offsets in ONE device pass
+    multi_offset_fused: bool = False  # all offsets in ONE device pass
     batch_grid: bool = False          # batch rides a kernel grid axis (one launch)
     tpu_only: bool = False            # compiled target is TPU (interpret elsewhere)
     sharded_partial: bool = False     # supplies sentinel-masked partials for
     #                                   halo-exchange sharding (distributed.*)
     region_grid: bool = False         # native per-region path: one fused program
     #                                   over the tile/window grid (texture maps)
+    volumetric: bool = False          # serves ndim=3 (D, H, W) volume specs
+    volume_only: bool = False         # serves ONLY ndim=3 specs (implies
+    #                                   volumetric; enforced at register())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,12 +74,14 @@ class Backend:
 
     ``validate(spec, shape)`` (optional) rejects spec/shape combinations the
     strategy cannot serve (e.g. blocked with a non-divisible height) BEFORE
-    tracing.  ``local_partial(ext, levels, dy, dx, local_h)`` (optional, for
+    tracing.  ``local_partial(ext, levels, offset, local_n)`` (optional, for
     ``caps.sharded_partial``) computes the partial GLCM of a halo-extended
-    row shard with -1 sentinels dropped — the per-shard hook the distributed
+    leading-axis shard with -1 sentinels dropped — ``offset`` is the
+    per-axis (dy, dx) / (dz, dy, dx) tuple and ``local_n`` the shard's
+    un-extended leading extent; this is the per-shard hook the distributed
     layer consumes.  ``region_compute(img_batch, spec)`` (optional, for
     ``caps.region_grid``) serves non-global specs natively, returning
-    (B, gh, gw, n_pairs, L, L); backends without it are served by the
+    (B, *grid, n_pairs, L, L); backends without it are served by the
     generic patch-extraction fallback in :func:`compute_regions`.
     """
 
@@ -87,17 +93,24 @@ class Backend:
     region_compute: Callable[[jax.Array, GLCMSpec], jax.Array] | None = None
 
 
+def supports_ndim(backend: Backend, ndim: int) -> bool:
+    """Whether ``backend`` can serve specs of spatial rank ``ndim``."""
+    if ndim == 3:
+        return backend.caps.volumetric
+    return not backend.caps.volume_only
+
+
 def compute_regions(
     backend: Backend, img_batch: jax.Array, spec: GLCMSpec
 ) -> jax.Array:
-    """Region-aware dispatch: (B, H, W) → (B, *grid, n_pairs, L, L) counts.
+    """Region-aware dispatch: (B, *spatial) → (B, *grid, n_pairs, L, L).
 
     "global" specs go straight to ``backend.compute`` (grid = ()). Non-global
     specs use the backend's native ``region_compute`` when it declares
-    ``caps.region_grid``; otherwise the generic fallback extracts the
-    (gh, gw) patch grid ONCE and feeds it through ``backend.compute`` as a
-    flat (B·gh·gw, rh, rw) batch — every registered strategy serves
-    tiled/windowed workloads unchanged.
+    ``caps.region_grid``; otherwise the generic fallback extracts the patch
+    grid ONCE and feeds it through ``backend.compute`` as a flat
+    (B·prod(grid), *region_shape) batch — every registered strategy serves
+    tiled/windowed workloads (2-D and 3-D alike) unchanged.
     """
     if spec.region == "global":
         return backend.compute(img_batch, spec)
@@ -105,9 +118,11 @@ def compute_regions(
         # register() guarantees region_compute is present iff the cap is set.
         return backend.region_compute(img_batch, spec)
     patches = extract_regions(img_batch, spec.region_shape, spec.strides)
-    b, gh, gw, rh, rw = patches.shape
-    mats = backend.compute(patches.reshape(b * gh * gw, rh, rw), spec)
-    return mats.reshape((b, gh, gw) + mats.shape[1:])
+    nd = spec.ndim
+    b = patches.shape[0]
+    grid = patches.shape[1 : 1 + nd]
+    mats = backend.compute(patches.reshape((-1,) + patches.shape[1 + nd :]), spec)
+    return mats.reshape((b,) + grid + mats.shape[1:])
 
 
 _REGISTRY: dict[str, Backend] = {}
@@ -123,6 +138,11 @@ def register(backend: Backend) -> Backend:
         raise ValueError(
             f"backend {backend.name!r}: caps.region_grid must match the "
             "presence of region_compute"
+        )
+    if backend.caps.volume_only and not backend.caps.volumetric:
+        raise ValueError(
+            f"backend {backend.name!r}: caps.volume_only requires "
+            "caps.volumetric"
         )
     _REGISTRY[backend.name] = backend
     return backend
@@ -145,88 +165,105 @@ def resolve_scheme(spec: GLCMSpec, *, require: tuple[str, ...] = ()) -> str:
     """Resolve ``spec.scheme`` (possibly "auto") to a registered backend name.
 
     "auto" picks the production path for the running jax backend: on TPU the
-    Pallas kernels (the fused multi-offset kernel when the spec asks for more
-    than one offset, else the pair-stream voting kernel), elsewhere the
-    conflict-free one-hot MXU scheme.  ``require`` names :class:`Capabilities`
-    fields the resolved backend must declare — "auto" then picks the first
-    capable backend, and an explicitly named scheme that lacks one raises.
+    Pallas kernels (the depth-slab volume kernel for ndim=3 specs, the fused
+    multi-offset kernel when a 2-D spec asks for more than one offset, else
+    the pair-stream voting kernel), elsewhere the conflict-free one-hot MXU
+    scheme.  ``require`` names :class:`Capabilities` fields the resolved
+    backend must declare — "auto" then picks the first capable backend, and
+    an explicitly named scheme that lacks one raises.  Volumetric specs
+    additionally require the ``volumetric`` capability (checked for named
+    schemes at plan time).
     """
     if spec.scheme != "auto":
         get_backend(spec.scheme)  # existence check; capability check in plan
         return spec.scheme
     if require:
         for name in available_backends():
-            caps = _REGISTRY[name].caps
-            if all(getattr(caps, cap) for cap in require):
+            backend = _REGISTRY[name]
+            if not supports_ndim(backend, spec.ndim):
+                continue
+            if all(getattr(backend.caps, cap) for cap in require):
                 return name
-        raise ValueError(f'no registered backend has capabilities {require!r}')
+        raise ValueError(
+            f"no registered backend has capabilities {require!r} "
+            f"for an ndim={spec.ndim} spec"
+        )
     if jax.default_backend() == "tpu":
+        if spec.ndim == 3:
+            return "pallas_volume"
         return "pallas_fused" if spec.n_pairs > 1 else "pallas"
     return "onehot"
 
 
 # ---------------------------------------------------------------------------
-# The five built-in strategies
+# The six built-in strategies
 # ---------------------------------------------------------------------------
 
 
 def _scatter_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
-    # One traced program: the per-pair scatters fuse under the plan's jit.
+    # One traced program: the per-offset scatters fuse under the plan's jit.
     return jnp.stack(
-        [glcm_scatter(img, spec.levels, d, t) for d, t in spec.pairs], axis=-3
+        [glcm_scatter(img, spec.levels, offset=off) for off in spec.offsets()],
+        axis=-3,
     )
 
 
 def _onehot_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
     # glcm_multi amortizes the image read across offsets and batches the
     # L×L matmuls — one program per request regardless of len(pairs).
-    return glcm_multi(img, spec.levels, spec.pairs, copies=spec.copies)
+    return glcm_multi(
+        img, spec.levels, offsets=spec.offsets(), copies=spec.copies
+    )
 
 
-def _onehot_local_partial(ext, levels, dy, dx, local_h):
-    from repro.core.distributed import local_partial_glcm  # late: no cycle
+def _onehot_local_partial(ext, levels, offset, local_n):
+    from repro.core.distributed import local_partial_nd  # late: no cycle
 
-    return local_partial_glcm(ext, levels, dy, dx, local_h)
+    return local_partial_nd(ext, levels, offset, local_n)
 
 
 def _onehot_region_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
     # Native fused windowed path: one extraction + batched voting matmuls
-    # with the window grid as the dot_general batch axis.
+    # with the window grid as the dot_general batch axis (any rank).
     return glcm_windowed(
         img, spec.levels, spec.pairs, spec.region_shape, spec.strides,
-        copies=spec.copies,
+        offsets=spec.offsets(), copies=spec.copies,
     )
 
 
 def _blocked_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
     return jnp.stack(
         [
-            glcm_blocked(img, spec.levels, d, t, num_blocks=spec.num_blocks)
-            for d, t in spec.pairs
+            glcm_blocked(
+                img, spec.levels, offset=off, num_blocks=spec.num_blocks
+            )
+            for off in spec.offsets()
         ],
         axis=-3,
     )
 
 
 def _blocked_validate(spec: GLCMSpec, shape: tuple[int, ...]) -> None:
-    h = shape[-2]
-    if h % spec.num_blocks:
+    n0 = shape[-spec.ndim]
+    if n0 % spec.num_blocks:
         raise ValueError(
-            f"image height {h} not divisible by num_blocks={spec.num_blocks}"
+            f"image height {n0} not divisible by num_blocks={spec.num_blocks}"
+            if spec.ndim == 2
+            else f"volume depth {n0} not divisible by num_blocks={spec.num_blocks}"
         )
-    bh = h // spec.num_blocks
-    for (d, t), (dy, _) in zip(spec.pairs, spec.offsets()):
-        if dy > bh:
+    bh = n0 // spec.num_blocks
+    for (d, t), off in zip(spec.pairs, spec.offsets()):
+        if off[0] > bh:
             raise ValueError(
-                f"halo dy={dy} of offset (d={d}, theta={t}) exceeds block height {bh}"
+                f"halo {off[0]} of offset (d={d}, {t}) exceeds block height {bh}"
             )
 
 
 def _pallas_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
     return jnp.stack(
         [
-            kops.glcm_pallas(img, spec.levels, d, t).astype(jnp.float32)
-            for d, t in spec.pairs
+            kops.glcm_pallas(img, spec.levels, offset=off).astype(jnp.float32)
+            for off in spec.offsets()
         ],
         axis=-3,
     )
@@ -245,11 +282,26 @@ def _pallas_fused_region_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
     ).astype(jnp.float32)
 
 
+def _pallas_volume_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
+    return kops.glcm_pallas_volume(
+        img, spec.levels, spec.pairs, copies=spec.copies
+    ).astype(jnp.float32)
+
+
+def _pallas_volume_validate(spec: GLCMSpec, shape: tuple[int, ...]) -> None:
+    if spec.ndim != 3:
+        raise ValueError(
+            'scheme "pallas_volume" serves only ndim=3 volume specs; use '
+            '"pallas"/"pallas_fused" for 2-D images'
+        )
+
+
 register(
     Backend(
         name="scatter",
         compute=_scatter_compute,
-        caps=Capabilities(),  # the contention baseline: no fast-path claims
+        # the contention baseline: no fast-path claims — but rank-general
+        caps=Capabilities(volumetric=True),
     )
 )
 register(
@@ -257,7 +309,8 @@ register(
         name="onehot",
         compute=_onehot_compute,
         caps=Capabilities(
-            multi_offset_fused=True, sharded_partial=True, region_grid=True
+            multi_offset_fused=True, sharded_partial=True, region_grid=True,
+            volumetric=True,
         ),
         local_partial=_onehot_local_partial,
         region_compute=_onehot_region_compute,
@@ -267,7 +320,7 @@ register(
     Backend(
         name="blocked",
         compute=_blocked_compute,
-        caps=Capabilities(),
+        caps=Capabilities(volumetric=True),
         validate=_blocked_validate,
     )
 )
@@ -275,7 +328,7 @@ register(
     Backend(
         name="pallas",
         compute=_pallas_compute,
-        caps=Capabilities(batch_grid=True, tpu_only=True),
+        caps=Capabilities(batch_grid=True, tpu_only=True, volumetric=True),
     )
 )
 register(
@@ -287,5 +340,16 @@ register(
             region_grid=True,
         ),
         region_compute=_pallas_fused_region_compute,
+    )
+)
+register(
+    Backend(
+        name="pallas_volume",
+        compute=_pallas_volume_compute,
+        caps=Capabilities(
+            multi_offset_fused=True, batch_grid=True, tpu_only=True,
+            volumetric=True, volume_only=True,
+        ),
+        validate=_pallas_volume_validate,
     )
 )

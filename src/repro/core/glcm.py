@@ -56,6 +56,21 @@ whole image to a tile/window grid — one GLCM (or feature vector) per region:
 Every registered scheme serves region specs (native fused paths for
 "onehot"/"pallas_fused", a generic patch-extraction fallback elsewhere), and
 each region's result equals ``glcm()`` of the extracted patch.
+
+Volumetric GLCM (3-D co-occurrence)
+-----------------------------------
+``ndim=3`` switches the spatial rank to (D, H, W) volumes (CT/MRI stacks,
+video-as-volume). The second element of each pair becomes one of the 13
+unique 3-D direction indices (``kernels.ref.DIRECTIONS_3D``; 0..3 are the
+in-plane thetas), and region fields take (rd, rh, rw) 3-tuples:
+
+    P = glcm.glcm(vol, 32, d=1, theta=8, ndim=3)                 # (L, L)
+    F = glcm.glcm_features(vol, 32, pairs=VOLUME_PAIRS, ndim=3)  # (13, 14)
+
+Batching, regions, schemes and the plan cache all generalize unchanged: a
+(B, D, H, W) stack is one dispatch ("auto" resolves to the depth-slab
+Pallas kernel on TPU — one launch per stack — and the rank-general one-hot
+MXU scheme elsewhere).
 """
 
 from __future__ import annotations
@@ -65,18 +80,34 @@ from typing import Literal
 import jax
 
 from repro.core.plan import compile_plan
-from repro.core.schemes import PAPER_PAIRS
+from repro.core.schemes import PAPER_PAIRS, VOLUME_PAIRS
 from repro.core.spec import GLCMSpec
 
-__all__ = ["glcm", "glcm_features", "GLCMSpec", "compile_plan", "Scheme", "PAPER_PAIRS"]
+__all__ = [
+    "glcm",
+    "glcm_features",
+    "GLCMSpec",
+    "compile_plan",
+    "Scheme",
+    "PAPER_PAIRS",
+    "VOLUME_PAIRS",
+]
 
-Scheme = Literal["scatter", "onehot", "blocked", "pallas", "pallas_fused", "auto"]
+Scheme = Literal[
+    "scatter", "onehot", "blocked", "pallas", "pallas_fused", "pallas_volume",
+    "auto",
+]
 
 
-def _check_ndim(image: jax.Array) -> None:
-    if image.ndim not in (2, 3):
+def _check_ndim(image: jax.Array, ndim: int) -> None:
+    if ndim == 2 and image.ndim not in (2, 3):
         raise ValueError(
             f"expected (H, W) image or (B, H, W) stack, got shape {image.shape}"
+        )
+    if ndim == 3 and image.ndim not in (3, 4):
+        raise ValueError(
+            f"expected (D, H, W) volume or (B, D, H, W) stack, "
+            f"got shape {image.shape}"
         )
 
 
@@ -93,17 +124,20 @@ def glcm(
     copies: int = 1,
     num_blocks: int = 4,
     region: str = "global",
-    region_shape: tuple[int, int] | int | None = None,
-    region_stride: tuple[int, int] | int | None = None,
+    region_shape: tuple[int, ...] | int | None = None,
+    region_stride: tuple[int, ...] | int | None = None,
+    ndim: int = 2,
 ) -> jax.Array:
-    """Gray-level co-occurrence matrix of image(s), float32.
+    """Gray-level co-occurrence matrix of image(s) or volume(s), float32.
 
     (H, W) input → (L, L); (B, H, W) input → (B, L, L), computed batched
     (vmap for the jnp schemes, a batch grid axis for the Pallas kernels).
-    Non-global ``region`` inserts the (gh, gw) region grid before the (L, L)
-    axes: one GLCM per tile/window.
+    Non-global ``region`` inserts the region grid before the (L, L) axes:
+    one GLCM per tile/window. With ``ndim=3`` the input is a (D, H, W)
+    volume (or (B, D, H, W) stack) and ``theta`` names one of the 13 unique
+    3-D directions (0..12; 0..3 are the in-plane thetas' order).
     """
-    _check_ndim(image)
+    _check_ndim(image, ndim)
     spec = GLCMSpec(
         levels=levels,
         pairs=((d, theta),),
@@ -116,6 +150,7 @@ def glcm(
         region=region,
         region_shape=region_shape,
         region_stride=region_stride,
+        ndim=ndim,
     )
     return compile_plan(spec, image.shape)(image)[..., 0, :, :]
 
@@ -128,23 +163,29 @@ def glcm_features(
     scheme: Scheme = "auto",
     quantize: str | None = "uniform",
     region: str = "global",
-    region_shape: tuple[int, int] | int | None = None,
-    region_stride: tuple[int, int] | int | None = None,
+    region_shape: tuple[int, ...] | int | None = None,
+    region_stride: tuple[int, ...] | int | None = None,
     select: tuple[str, ...] | None = None,
+    ndim: int = 2,
 ) -> jax.Array:
-    """Image(s) → Haralick features over ``pairs`` offsets (normalized GLCMs).
+    """Image(s)/volume(s) → Haralick features over ``pairs`` offsets
+    (normalized GLCMs).
 
     (H, W) input → (len(pairs), 14); (B, H, W) input → (B, len(pairs), 14).
-    Non-global ``region`` inserts the (gh, gw) region grid before the
+    Non-global ``region`` inserts the region grid before the
     (len(pairs), n_feats) axes — a per-region texture map. ``select`` names a
     Haralick feature subset (columns follow its order; skips the O(L³)
-    ``max_correlation_coefficient`` solve when unselected). One compiled
-    program per request shape regardless of scheme.
+    ``max_correlation_coefficient`` solve when unselected). With ``ndim=3``
+    the input is a (D, H, W) volume / (B, D, H, W) stack and ``pairs`` are
+    (d, direction) tuples — pass ``VOLUME_PAIRS`` for all 13 unique 3-D
+    directions at d=1. One compiled program per request shape regardless of
+    scheme.
     """
-    _check_ndim(image)
+    _check_ndim(image, ndim)
     spec = GLCMSpec(
         levels=levels, pairs=tuple(pairs), scheme=scheme, quantize=quantize,
         region=region, region_shape=region_shape, region_stride=region_stride,
+        ndim=ndim,
     )
     features = True if select is None else tuple(select)
     return compile_plan(spec, image.shape, features=features)(image)

@@ -140,7 +140,10 @@ def glcm_feature_stream(
     A region-structured spec (``spec.region`` of "tiles"/"window") streams
     per-image TEXTURE MAPS instead: each yielded tensor gains the (gh, gw)
     region grid — (gh, gw, len(pairs), 14) per image — with the same
-    transfer/compute overlap and batching protocol."""
+    transfer/compute overlap and batching protocol.  A volumetric spec
+    (``spec.ndim == 3``) streams (D, H, W) volumes the same way —
+    ``batch_size > 1`` coalesces them into (batch_size, D, H, W) stacks,
+    one device dispatch (one depth-slab kernel launch on TPU) per stack."""
     if spec is None:
         if levels is None:
             raise ValueError("pass either spec= or levels")

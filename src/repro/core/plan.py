@@ -31,10 +31,17 @@ feature names — a subset skips work the selection doesn't need (notably the
 O(L³) eigendecomposition of ``max_correlation_coefficient``, which dominates
 texture-map feature cost).
 
-Unbatched (H, W) inputs are lifted to a (1, H, W) stack for the backend's
-``compute`` contract and squeezed on the way out; batchedness is part of the
-cache key (a different program shape), exactly like jit's own shape
-specialization.
+Volumetric specs (``spec.ndim == 3``) run the same pipeline over (D, H, W)
+volumes / (B, D, H, W) stacks: the spec's rank disambiguates a 3-length
+shape, offsets/regions validate against the (D, H, W) extents pre-trace,
+and the backend must declare the ``volumetric`` capability ("auto" resolves
+to the depth-slab Pallas kernel on TPU, the rank-general one-hot scheme
+elsewhere).
+
+Unbatched (H, W) / (D, H, W) inputs are lifted to a leading-1 stack for the
+backend's ``compute`` contract and squeezed on the way out; batchedness is
+part of the cache key (a different program shape), exactly like jit's own
+shape specialization.
 """
 
 from __future__ import annotations
@@ -67,8 +74,10 @@ class GLCMPlan:
 
     ``spec`` is fully resolved (``spec.scheme`` names a registered backend,
     never "auto").  ``grid`` is the region grid — () for "global", else
-    (gh, gw).  ``fn`` is the jitted program: (H, W) → (*grid, n_pairs, L, L)
-    or (B, H, W) → (B, *grid, n_pairs, L, L); with ``features`` the trailing
+    (gh, gw) / (gd, gh, gw).  ``fn`` is the jitted program:
+    (*spatial) → (*grid, n_pairs, L, L) or (B, *spatial) →
+    (B, *grid, n_pairs, L, L), where ``*spatial`` is (H, W) for ndim=2
+    specs and (D, H, W) for volumetric ones; with ``features`` the trailing
     (L, L) becomes the selected Haralick feature vector.
     """
 
@@ -115,10 +124,16 @@ def plan_cache_limit(limit: int | None = None) -> int:
 
 
 def plan_cache_stats() -> dict:
-    """{'hits', 'misses', 'evictions', 'size', 'limit'} of the plan cache
-    (counters monotonic until clear)."""
+    """{'hits', 'misses', 'evictions', 'hit_rate', 'size', 'limit'} of the
+    plan cache (counters monotonic until clear; ``hit_rate`` is
+    hits / (hits + misses), 0.0 before any lookup)."""
     with _LOCK:
-        return {**_STATS, "size": len(_CACHE), "limit": _LIMIT[0]}
+        lookups = _STATS["hits"] + _STATS["misses"]
+        hit_rate = _STATS["hits"] / lookups if lookups else 0.0
+        return {
+            **_STATS, "hit_rate": hit_rate, "size": len(_CACHE),
+            "limit": _LIMIT[0],
+        }
 
 
 def _quantizer(spec: GLCMSpec) -> Callable[[jax.Array], jax.Array] | None:
@@ -155,7 +170,9 @@ def compile_plan(
 ) -> GLCMPlan:
     """Resolve ``spec`` for input ``shape`` and return the cached GLCMPlan.
 
-    ``shape`` is (H, W) or (B, H, W).  ``features=True`` appends the full
+    ``shape`` is (H, W) or (B, H, W) for 2-D specs, (D, H, W) or
+    (B, D, H, W) for volumetric ``spec.ndim == 3`` specs — the spec's rank
+    disambiguates a 3-length shape.  ``features=True`` appends the full
     Haralick-14 stage inside the same program (one dispatch per request); a
     tuple of feature names selects a subset in the given order (skipping the
     expensive eigendecomposition when ``max_correlation_coefficient`` is not
@@ -165,8 +182,13 @@ def compile_plan(
     raises.
     """
     shape = tuple(int(s) for s in shape)
-    if len(shape) not in (2, 3):
-        raise ValueError(f"expected (H, W) or (B, H, W) shape, got {shape}")
+    nd = spec.ndim
+    if len(shape) not in (nd, nd + 1):
+        expect = ("(H, W) or (B, H, W)" if nd == 2
+                  else "(D, H, W) or (B, D, H, W)")
+        raise ValueError(
+            f"expected a {expect} shape for an ndim={nd} spec, got {shape}"
+        )
     require = tuple(require)
     features = _canonical_features(features)
     key = (spec, shape, features, require)
@@ -179,6 +201,13 @@ def compile_plan(
 
     name = _backends.resolve_scheme(spec, require=require)
     backend = _backends.get_backend(name)
+    if not _backends.supports_ndim(backend, nd):
+        raise ValueError(
+            f"scheme {name!r} lacks required capability 'volumetric' "
+            f"(cannot serve ndim={nd} specs)"
+            if nd == 3
+            else f"scheme {name!r} serves only ndim=3 volume specs"
+        )
     for cap in require:
         if not getattr(backend.caps, cap):
             raise ValueError(
@@ -186,32 +215,38 @@ def compile_plan(
             )
     resolved = spec if spec.scheme == name else spec.replace(scheme=name)
 
-    h, w = shape[-2:]
-    # Region validation happens against the concrete image shape BEFORE any
+    spatial = shape[-nd:]
+    # Region validation happens against the concrete input shape BEFORE any
     # tracing: tile divisibility / window fit...
-    grid = resolved.region_grid(h, w)
+    grid = resolved.region_grid(*spatial)
     if grid:
-        # ...and the backend sees patches, never the whole image, so its own
+        # ...and the backend sees patches, never the whole input, so its own
         # shape validation runs on the per-region shape it will serve.
-        n_regions = shape[0] * grid[0] * grid[1] if len(shape) == 3 else (
-            grid[0] * grid[1]
-        )
+        n_regions = 1
+        for g in grid:
+            n_regions *= g
+        if len(shape) == nd + 1:
+            n_regions *= shape[0]
         backend_shape: tuple[int, ...] = (n_regions,) + resolved.region_shape
     else:
         # Spec offsets are validated against the region for non-global specs
-        # (at spec construction); for "global" the region IS the image.
-        for (d, t), (dy, dx) in zip(resolved.pairs, resolved.offsets()):
-            if dy >= h or abs(dx) >= w:
+        # (at spec construction); for "global" the region IS the input. The
+        # leading spatial delta is non-negative by construction; the rest
+        # may be negative (3-D inter-slice directions).
+        for (d, t), off in zip(resolved.pairs, resolved.offsets()):
+            if off[0] >= spatial[0] or any(
+                abs(o) >= s for o, s in zip(off[1:], spatial[1:])
+            ):
                 raise ValueError(
-                    f"offset (d={d}, theta={t}) → (dy={dy}, dx={dx}) exceeds "
-                    f"image shape {(h, w)}"
+                    f"offset (d={d}, {t}) → {off} exceeds "
+                    f"input shape {spatial}"
                 )
         backend_shape = shape
     if backend.validate is not None:
         backend.validate(resolved, backend_shape)
 
     quant = _quantizer(resolved)
-    batched = len(shape) == 3
+    batched = len(shape) == nd + 1
     select = None if isinstance(features, bool) else features
 
     def run(img: jax.Array) -> jax.Array:

@@ -12,11 +12,19 @@ All functions operate on an already-quantized int image (``core.quantize``)
 and return float32 count matrices of shape (L, L) (or (n_pairs, L, L) for the
 multi-offset variants), matching ``kernels.ref.glcm_reference`` exactly.
 
-Every scheme is **batch-aware**: passing a (B, H, W) stack instead of a
-single (H, W) image returns the stacked result with a leading batch axis
-((B, L, L) / (B, n_pairs, L, L)), computed under ``jax.vmap`` so XLA fuses
-the B instances into one batched program — numerically identical to a
-Python loop over images, but one dispatch.
+Every scheme is **batch-aware**: passing a stack with one extra leading axis
+((B, H, W) instead of (H, W), (B, D, H, W) instead of (D, H, W)) returns the
+stacked result with a leading batch axis, computed under ``jax.vmap`` so XLA
+fuses the B instances into one batched program — numerically identical to a
+Python loop over inputs, but one dispatch.
+
+Every scheme is also **rank-general**: the legacy ``(d, theta)`` keywords
+address 2-D images, while ``offset=`` (a (dy, dx) or (dz, dy, dx) tuple —
+see ``kernels.ref.glcm_offsets_3d`` / ``DIRECTIONS_3D`` for the 13 canonical
+3-D directions) computes the same voting math over (D, H, W) volumes; the
+multi-offset entry points take the analogous ``offsets=``.  The voting
+schemes never see the rank: pair planes are extracted by
+``kernels.ref.pair_planes_nd`` and everything downstream is a flat stream.
 """
 
 from __future__ import annotations
@@ -26,7 +34,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ref import glcm_offsets, pair_planes
+from repro.kernels.ref import (
+    DIRECTIONS_3D,
+    glcm_offsets,
+    pair_planes_nd,
+)
 
 __all__ = [
     "glcm_scatter",
@@ -36,28 +48,54 @@ __all__ = [
     "glcm_windowed",
     "extract_regions",
     "PAPER_PAIRS",
+    "VOLUME_PAIRS",
 ]
 
 # The paper's Table II / III parameter grid: d ∈ {1, 4}, θ ∈ {0°, 45°}.
 PAPER_PAIRS: tuple[tuple[int, int], ...] = ((1, 0), (1, 45), (4, 0), (4, 45))
 
+# All 13 unique 3-D directions at distance 1 — the canonical volumetric
+# workload (pairs for an ndim=3 GLCMSpec: (d, direction_index)).
+VOLUME_PAIRS: tuple[tuple[int, int], ...] = tuple(
+    (1, k) for k in range(len(DIRECTIONS_3D))
+)
+
+
+def _resolve_offset(
+    d: int, theta: int, offset: tuple[int, ...] | None
+) -> tuple[int, ...]:
+    """An explicit per-axis ``offset`` wins; else the 2-D (d, theta) pair."""
+    if offset is None:
+        return glcm_offsets(d, theta)
+    off = tuple(int(v) for v in offset)
+    if len(off) not in (2, 3):
+        raise ValueError(
+            f"offset must be (dy, dx) or (dz, dy, dx), got {offset!r}"
+        )
+    return off
+
 
 def _batch_aware(fn):
-    """Lift a (H, W) → (...) scheme to also accept (B, H, W) via vmap.
+    """Lift a single-input scheme to also accept a leading batch axis.
 
-    Non-image arguments stay static (closed over), so the vmapped body
-    compiles once and is shared by every image in the stack.
+    The spatial rank is the length of the resolved offset (2 for images, 3
+    for volumes); an input with one extra leading axis is vmapped. Non-image
+    arguments stay static (closed over), so the vmapped body compiles once
+    and is shared by every image in the stack.
     """
 
     @functools.wraps(fn)
-    def wrapper(img, *args, **kwargs):
-        if img.ndim == 3:
-            return jax.vmap(lambda im: fn(im, *args, **kwargs))(img)
-        if img.ndim != 2:
+    def wrapper(img, levels, d=1, theta=0, *, offset=None, **kwargs):
+        off = _resolve_offset(d, theta, offset)
+        nd = len(off)
+        if img.ndim == nd + 1:
+            return jax.vmap(lambda im: fn(im, levels, off, **kwargs))(img)
+        if img.ndim != nd:
             raise ValueError(
-                f"expected (H, W) or (B, H, W) image, got shape {img.shape}"
+                f"expected a {nd}-D input or a batched {nd + 1}-D stack for "
+                f"offset {off}, got shape {img.shape}"
             )
-        return fn(img, *args, **kwargs)
+        return fn(img, levels, off, **kwargs)
 
     return wrapper
 
@@ -70,8 +108,7 @@ def _batch_aware(fn):
 def glcm_scatter(
     img: jax.Array,
     levels: int,
-    d: int = 1,
-    theta: int = 0,
+    offset: tuple[int, ...] = (0, 1),
     *,
     symmetric: bool = False,
     normalize: bool = False,
@@ -79,7 +116,7 @@ def glcm_scatter(
     """Scheme 1: every pixel pair votes via a scatter-add into one shared
     (L, L) accumulator. XLA serializes colliding updates — the direct
     analogue of CUDA atomic contention (paper §I.B / Table II)."""
-    assoc, ref = pair_planes(img, d, theta)
+    assoc, ref = pair_planes_nd(img, offset)
     pos = (ref.astype(jnp.int32) * levels + assoc.astype(jnp.int32)).reshape(-1)
     glcm = jnp.zeros((levels * levels,), jnp.float32).at[pos].add(1.0)
     glcm = glcm.reshape(levels, levels)
@@ -105,8 +142,7 @@ def _onehot(v: jax.Array, levels: int, dtype) -> jax.Array:
 def glcm_onehot(
     img: jax.Array,
     levels: int,
-    d: int = 1,
-    theta: int = 0,
+    offset: tuple[int, ...] = (0, 1),
     *,
     copies: int = 1,
     symmetric: bool = False,
@@ -125,7 +161,7 @@ def glcm_onehot(
     """
     if copies < 1:
         raise ValueError(f"copies (R) must be >= 1, got {copies}")
-    assoc, ref = pair_planes(img, d, theta)
+    assoc, ref = pair_planes_nd(img, offset)
     a = assoc.reshape(-1).astype(jnp.int32)
     r = ref.reshape(-1).astype(jnp.int32)
     n = a.shape[0]
@@ -152,32 +188,36 @@ def glcm_onehot(
     return glcm
 
 
-@_batch_aware
 def glcm_multi(
     img: jax.Array,
     levels: int,
     pairs: tuple[tuple[int, int], ...] = PAPER_PAIRS,
     *,
+    offsets: tuple[tuple[int, ...], ...] | None = None,
     symmetric: bool = False,
     normalize: bool = False,
     copies: int = 1,
     dtype=jnp.float32,
 ) -> jax.Array:
-    """Beyond-paper fusion: GLCMs for several (d, θ) offsets in one pass.
+    """Beyond-paper fusion: GLCMs for several offsets in one pass.
 
-    The associate one-hot matrix is built ONCE per offset group sharing the
-    same valid region would require masking; here we amortize the *image
-    read* (the memory-bound term) across offsets — XLA fuses the slices of
-    one buffer — and batch the L×L matmuls. ``copies`` is the paper's R,
-    forwarded to every per-offset voting matmul. Returns (len(pairs), L, L)."""
+    ``pairs`` are the legacy 2-D (d, θ) tuples; ``offsets`` (explicit
+    (dy, dx) / (dz, dy, dx) tuples, overriding ``pairs``) serves any rank.
+    We amortize the *image read* (the memory-bound term) across offsets —
+    XLA fuses the slices of one buffer — and batch the L×L matmuls.
+    ``copies`` is the paper's R, forwarded to every per-offset voting
+    matmul. Returns (len(offsets), L, L), batch axis leading if present."""
+    if offsets is None:
+        offsets = tuple(glcm_offsets(d, t) for d, t in pairs)
     return jnp.stack(
         [
             glcm_onehot(
-                img, levels, d, t, symmetric=symmetric, normalize=normalize,
-                copies=copies, dtype=dtype,
+                img, levels, offset=off, symmetric=symmetric,
+                normalize=normalize, copies=copies, dtype=dtype,
             )
-            for d, t in pairs
-        ]
+            for off in offsets
+        ],
+        axis=-3,
     )
 
 
@@ -188,39 +228,64 @@ def glcm_multi(
 
 def extract_regions(
     img: jax.Array,
-    region_shape: tuple[int, int],
-    stride: tuple[int, int],
+    region_shape: tuple[int, ...],
+    stride: tuple[int, ...],
 ) -> jax.Array:
-    """Extract the (gh, gw) grid of (rh, rw) regions from (..., H, W) images.
+    """Extract the region grid from (..., H, W) images or (..., D, H, W)
+    volumes; the spatial rank is ``len(region_shape)``.
 
-    Returns (..., gh, gw, rh, rw). ``stride == region_shape`` is the paper's
-    non-overlapping image partition (realized as a pure reshape/transpose —
-    no gather); smaller strides give overlapping sliding windows (one fused
-    gather on the trailing two axes, shared by every leading batch dim).
+    Returns (..., *grid, *region_shape) — e.g. (..., gh, gw, rh, rw) for
+    images, (..., gd, gh, gw, rd, rh, rw) for volumes. ``stride ==
+    region_shape`` is the paper's non-overlapping partition (realized as a
+    pure reshape/transpose — no gather); smaller strides give overlapping
+    sliding windows (one fused gather on the trailing spatial axes, shared
+    by every leading batch dim).
     """
-    rh, rw = region_shape
-    sy, sx = stride
-    h, w = img.shape[-2:]
-    if rh > h or rw > w:
-        raise ValueError(f"region {(rh, rw)} exceeds image shape {(h, w)}")
-    if (sy, sx) == (rh, rw) and h % rh == 0 and w % rw == 0:
-        gh, gw = h // rh, w // rw
-        tiled = img.reshape(img.shape[:-2] + (gh, rh, gw, rw))
-        return jnp.swapaxes(tiled, -3, -2)
-    gh = (h - rh) // sy + 1
-    gw = (w - rw) // sx + 1
-    rows = sy * jnp.arange(gh)[:, None] + jnp.arange(rh)[None, :]   # (gh, rh)
-    cols = sx * jnp.arange(gw)[:, None] + jnp.arange(rw)[None, :]   # (gw, rw)
-    return img[..., rows[:, None, :, None], cols[None, :, None, :]]
+    nd = len(region_shape)
+    if len(stride) != nd:
+        raise ValueError(f"stride {stride} rank != region_shape {region_shape}")
+    dims = img.shape[-nd:]
+    if any(r > s for r, s in zip(region_shape, dims)):
+        raise ValueError(f"region {region_shape} exceeds input shape {dims}")
+    lead = img.shape[:-nd]
+    nlead = len(lead)
+    if tuple(stride) == tuple(region_shape) and not any(
+        s % r for s, r in zip(dims, region_shape)
+    ):
+        grid = tuple(s // r for s, r in zip(dims, region_shape))
+        inter = sum(((g, r) for g, r in zip(grid, region_shape)), ())
+        tiled = img.reshape(lead + inter)
+        # lead + (g0, r0, g1, r1, ...) → lead + (g0, g1, ..., r0, r1, ...)
+        perm = (
+            tuple(range(nlead))
+            + tuple(nlead + 2 * i for i in range(nd))
+            + tuple(nlead + 2 * i + 1 for i in range(nd))
+        )
+        return jnp.transpose(tiled, perm)
+    grid = tuple(
+        (s - r) // st + 1 for s, r, st in zip(dims, region_shape, stride)
+    )
+    index: list = [Ellipsis]
+    for i in range(nd):
+        ar = (
+            stride[i] * jnp.arange(grid[i])[:, None]
+            + jnp.arange(region_shape[i])[None, :]
+        )  # (g_i, r_i)
+        shape = [1] * (2 * nd)
+        shape[i] = grid[i]
+        shape[nd + i] = region_shape[i]
+        index.append(ar.reshape(shape))
+    return img[tuple(index)]
 
 
 def glcm_windowed(
     img: jax.Array,
     levels: int,
     pairs: tuple[tuple[int, int], ...],
-    region_shape: tuple[int, int],
-    stride: tuple[int, int],
+    region_shape: tuple[int, ...],
+    stride: tuple[int, ...],
     *,
+    offsets: tuple[tuple[int, ...], ...] | None = None,
     copies: int = 1,
     dtype=jnp.float32,
 ) -> jax.Array:
@@ -229,19 +294,24 @@ def glcm_windowed(
     dot_general batch axis (Scheme 2's conflict-free voting, per window).
 
     ``img`` is (H, W) → (gh, gw, n_pairs, L, L) or (B, H, W) →
-    (B, gh, gw, n_pairs, L, L). Pairs are counted strictly within each
-    region, so the result for every window equals ``glcm_multi`` of the
-    extracted patch. ``copies`` is the paper's R, splitting each window's
-    pair stream into private sub-accumulators.
+    (B, gh, gw, n_pairs, L, L); volumes gain the analogous (gd, gh, gw)
+    grid of (rd, rh, rw) sub-volumes (``offsets`` carries the 3-D
+    directions). Pairs are counted strictly within each region, so the
+    result for every window equals ``glcm_multi`` of the extracted patch.
+    ``copies`` is the paper's R, splitting each window's pair stream into
+    private sub-accumulators.
     """
     if copies < 1:
         raise ValueError(f"copies (R) must be >= 1, got {copies}")
+    if offsets is None:
+        offsets = tuple(glcm_offsets(d, t) for d, t in pairs)
+    nd = len(region_shape)
     patches = extract_regions(img, region_shape, stride)
-    lead = patches.shape[:-2]
-    flat = patches.reshape((-1,) + patches.shape[-2:]).astype(jnp.int32)
+    lead = patches.shape[:-nd]
+    flat = patches.reshape((-1,) + patches.shape[-nd:]).astype(jnp.int32)
 
-    def votes(d: int, t: int) -> jax.Array:
-        assoc, ref = pair_planes(flat, d, t)   # one fused slice for all windows
+    def votes(off: tuple[int, ...]) -> jax.Array:
+        assoc, ref = pair_planes_nd(flat, off)  # one fused slice, all windows
         a = assoc.reshape(flat.shape[0], -1)
         r = ref.reshape(flat.shape[0], -1)
         pad = (-a.shape[1]) % copies
@@ -258,8 +328,8 @@ def glcm_windowed(
         )                                      # (N·R, L, L)
         return sub.reshape(-1, copies, levels, levels).sum(axis=1)
 
-    mats = jnp.stack([votes(d, t) for d, t in pairs], axis=1)
-    return mats.reshape(lead + (len(pairs), levels, levels))
+    mats = jnp.stack([votes(off) for off in offsets], axis=1)
+    return mats.reshape(lead + (len(offsets), levels, levels))
 
 
 # ---------------------------------------------------------------------------
@@ -270,45 +340,51 @@ def glcm_windowed(
 def glcm_blocked(
     img: jax.Array,
     levels: int,
-    d: int = 1,
-    theta: int = 0,
+    offset: tuple[int, ...] = (0, 1),
     *,
     num_blocks: int = 4,
     copies: int = 1,
 ) -> jax.Array:
     """Scheme 3's image partitioning (paper Eq. (7)–(9)) on one device: the
-    image is split into ``num_blocks`` row blocks; block ``i`` is extended by
-    the halo ``Pad = d·N_terms(θ)`` rows (Eq. (9)) so boundary pairs are
-    counted exactly once; partial GLCMs are accumulated over a ``lax.scan``
-    (the sequential-stream analogue — on TPU the overlap of "copy block k+1 /
-    process block k" is realized by XLA's async DMA prefetch ahead of the
-    scan body, and at cluster scale by ``core.distributed.glcm_sharded``).
+    input is split into ``num_blocks`` blocks along its leading spatial axis
+    (row blocks for images, depth slabs for volumes); block ``i`` is extended
+    by the halo ``Pad`` leading slices (Eq. (9), the offset's leading delta)
+    so boundary pairs are counted exactly once; partial GLCMs are accumulated
+    over a ``lax.scan`` (the sequential-stream analogue — on TPU the overlap
+    of "copy block k+1 / process block k" is realized by XLA's async DMA
+    prefetch ahead of the scan body, and at cluster scale by
+    ``core.distributed.glcm_sharded``).
     """
-    h, w = img.shape
-    dy, dx = glcm_offsets(d, theta)
-    if h % num_blocks:
-        raise ValueError(f"image height {h} not divisible by num_blocks={num_blocks}")
-    bh = h // num_blocks
-    if dy > bh:
-        raise ValueError(f"halo dy={dy} exceeds block height {bh}")
+    n0 = img.shape[0]
+    d0 = offset[0]  # leading-axis delta: dy (2-D) / dz (3-D); >= 0 canonically
+    if d0 < 0:
+        raise ValueError(f"blocked scheme needs a non-negative leading delta, got {offset}")
+    if n0 % num_blocks:
+        raise ValueError(
+            f"leading extent {n0} not divisible by num_blocks={num_blocks}"
+        )
+    bh = n0 // num_blocks
+    if d0 > bh:
+        raise ValueError(f"halo {d0} exceeds block extent {bh}")
 
-    # Pad the bottom with `dy` sentinel rows so every block can carry a full
-    # halo; sentinel pairs vote into a dead bin and are dropped (mask).
-    imgp = jnp.pad(img, ((0, dy), (0, 0)), constant_values=-1)
-    # Block i covers rows [i*bh, (i+1)*bh + dy) — the paper's offset_end + Pad.
+    # Pad the trailing edge with `d0` sentinel slices so every block can carry
+    # a full halo; sentinel pairs vote into a dead bin and are dropped (mask).
+    pad_cfg = ((0, d0),) + ((0, 0),) * (img.ndim - 1)
+    imgp = jnp.pad(img, pad_cfg, constant_values=-1)
+    # Block i covers slices [i*bh, (i+1)*bh + d0) — the paper's offset_end + Pad.
     starts = jnp.arange(num_blocks) * bh
+    rest = img.shape[1:]
     blocks = jax.vmap(
-        lambda s: jax.lax.dynamic_slice(imgp, (s, 0), (bh + dy, w))
+        lambda s: jax.lax.dynamic_slice(
+            imgp, (s,) + (0,) * (img.ndim - 1), (bh + d0,) + rest
+        )
     )(starts)
 
     def body(acc, blk):
-        # Within a block: assoc rows [0, bh), ref rows [dy, bh+dy).
-        if dx >= 0:
-            assoc = blk[:bh, : w - dx]
-            ref = blk[dy : bh + dy, dx:]
-        else:
-            assoc = blk[:bh, -dx:]
-            ref = blk[dy : bh + dy, : w + dx]
+        # Within a block: pair_planes_nd of the halo-extended block gives
+        # assoc over [0, bh) and ref over [d0, bh + d0) on the leading axis,
+        # with the in-plane deltas sliced on the remaining axes.
+        assoc, ref = pair_planes_nd(blk, offset)
         a = assoc.reshape(-1)
         r = ref.reshape(-1)
         valid = (a >= 0) & (r >= 0)

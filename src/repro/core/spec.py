@@ -3,8 +3,8 @@
 The paper's contribution is picking the *right execution strategy* per
 workload (contended scatter, R-copy privatized voting, stream-pipelined
 blocks).  A ``GLCMSpec`` captures everything that strategy choice depends
-on — gray levels, the (d, θ) offset set, quantization, post-processing,
-scheme knobs — as one immutable value, so the execution layer
+on — gray levels, the offset set, quantization, post-processing, scheme
+knobs, spatial rank — as one immutable value, so the execution layer
 (``core.plan.compile_plan`` → ``core.backends`` registry) can resolve,
 compile and cache a program for it exactly once per ``(spec, shape)``.
 
@@ -12,13 +12,20 @@ A spec is *pure data*: it never touches jax, never dispatches, and is
 hashable (usable as a cache key and as a jit static argument).  Scheme
 *names* are validated against the registry only at plan time — the spec
 layer stays import-light and backend-agnostic.
+
+Volumetric workloads: ``ndim=3`` switches the spatial rank from (H, W)
+images to (D, H, W) volumes.  Pairs keep the same two-int shape but their
+second element becomes one of the 13 unique 3-D direction indices
+(``kernels.ref.DIRECTIONS_3D``; 0..3 are the in-plane thetas, 4..12 the
+dz = +1 inter-slice directions), validated exactly like the 2-D (d, θ)
+set.  Region fields generalize to 3-tuples ((rd, rh, rw) sub-volumes).
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-from repro.kernels.ref import glcm_offsets
+from repro.kernels.ref import glcm_offsets, glcm_offsets_3d
 
 __all__ = ["GLCMSpec", "QUANTIZE_MODES", "REGION_MODES"]
 
@@ -33,17 +40,23 @@ QUANTIZE_MODES = (None, "uniform", "equalized")
 REGION_MODES = ("global", "tiles", "window")
 
 
-def _shape2(value, name: str) -> tuple[int, int]:
-    """Canonicalize an int or (h, w) pair to a validated int 2-tuple."""
+def _shape_nd(value, name: str, ndim: int) -> tuple[int, ...]:
+    """Canonicalize an int or per-axis tuple to a validated int ``ndim``-tuple."""
     if isinstance(value, int):
-        value = (value, value)
+        value = (value,) * ndim
     try:
-        rh, rw = (int(v) for v in value)
+        dims = tuple(int(v) for v in value)
     except (TypeError, ValueError):
-        raise ValueError(f"{name} must be an int or an (h, w) pair, got {value!r}") from None
-    if rh < 1 or rw < 1:
-        raise ValueError(f"{name} entries must be >= 1, got {(rh, rw)}")
-    return rh, rw
+        raise ValueError(
+            f"{name} must be an int or a {ndim}-tuple, got {value!r}"
+        ) from None
+    if len(dims) != ndim:
+        raise ValueError(
+            f"{name} must have {ndim} entries for an ndim={ndim} spec, got {dims}"
+        )
+    if any(s < 1 for s in dims):
+        raise ValueError(f"{name} entries must be >= 1, got {dims}")
+    return dims
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,16 +66,21 @@ class GLCMSpec:
     Fields
     ------
     levels      gray levels L of the output (L, L) matrices, in [2, 256].
-    pairs       (d, θ) offset tuples; every backend computes ALL of them in
-                one program (n_pairs axis of the result).
+    pairs       offset tuples; every backend computes ALL of them in one
+                program (n_pairs axis of the result). For ``ndim=2`` each is
+                (d, θ) with θ ∈ {0, 45, 90, 135}; for ``ndim=3`` each is
+                (d, direction) with direction indexing the 13 unique 3-D
+                directions of ``kernels.ref.DIRECTIONS_3D``.
     scheme      backend name ("scatter" | "onehot" | "blocked" | "pallas" |
-                "pallas_fused") or "auto" (resolved at plan time from the
-                running jax backend and the registry's capabilities).
+                "pallas_fused" | "pallas_volume") or "auto" (resolved at plan
+                time from the running jax backend and the registry's
+                capabilities).
     quantize    pre-quantization mode (see QUANTIZE_MODES), applied per image.
     symmetric   add the transpose (P + Pᵀ) after counting.
     normalize   divide each matrix by its sum (probabilities, not counts).
     copies      the paper's R: number of private sub-accumulators (Scheme 2).
-    num_blocks  row blocks for the blocked scheme (Scheme 3, single device).
+    num_blocks  leading-axis blocks for the blocked scheme (Scheme 3, single
+                device): row blocks for images, depth slabs for volumes.
     vrange      static (vmin, vmax) for uniform quantization; None derives
                 the range from each image's own data (the default everywhere
                 except the streaming pipeline, which pins 0..255).
@@ -70,15 +88,18 @@ class GLCMSpec:
                 per image, bit-exact legacy behavior), "tiles" (one GLCM per
                 cell of the non-overlapping ``region_shape`` partition), or
                 "window" (one GLCM per sliding ``region_shape`` window at
-                ``region_stride``). Non-global outputs gain a (gh, gw) region
-                grid between the batch and n_pairs axes.
-    region_shape   (rh, rw) tile/window size (an int means square); required
-                for "tiles"/"window", forbidden for "global". Pairs are
-                counted strictly WITHIN each region, so every offset must fit
-                inside it (dy < rh, |dx| < rw).
-    region_stride  (sy, sx) sliding-window step for "window" (defaults to
-                (1, 1): a dense per-pixel texture map); forbidden otherwise
-                ("tiles" strides by its own shape, by definition).
+                ``region_stride``). Non-global outputs gain a region grid
+                ((gh, gw), or (gd, gh, gw) for volumes) between the batch
+                and n_pairs axes.
+    region_shape   tile/window size — (rh, rw), or (rd, rh, rw) for ndim=3
+                (an int means a square/cube); required for "tiles"/"window",
+                forbidden for "global". Pairs are counted strictly WITHIN
+                each region, so every offset must fit inside it.
+    region_stride  sliding-window step for "window" (defaults to all-ones: a
+                dense per-voxel texture map); forbidden otherwise ("tiles"
+                strides by its own shape, by definition).
+    ndim        spatial rank of the input: 2 for (H, W) images (the default,
+                bit-exact legacy behavior), 3 for (D, H, W) volumes.
     """
 
     levels: int
@@ -91,10 +112,13 @@ class GLCMSpec:
     num_blocks: int = 4
     vrange: tuple[float | None, float | None] | None = None
     region: str = "global"
-    region_shape: tuple[int, int] | int | None = None
-    region_stride: tuple[int, int] | int | None = None
+    region_shape: tuple[int, ...] | int | None = None
+    region_stride: tuple[int, ...] | int | None = None
+    ndim: int = 2
 
     def __post_init__(self):
+        if self.ndim not in (2, 3):
+            raise ValueError(f"ndim must be 2 or 3, got {self.ndim}")
         if not (2 <= self.levels <= 256):
             raise ValueError(f"levels must be in [2, 256], got {self.levels}")
         # Coerce pairs to a canonical hashable tuple-of-int-tuples (callers
@@ -102,9 +126,12 @@ class GLCMSpec:
         pairs = tuple((int(d), int(t)) for d, t in self.pairs)
         object.__setattr__(self, "pairs", pairs)
         if not pairs:
-            raise ValueError("spec.pairs must name at least one (d, theta) offset")
+            raise ValueError(
+                "spec.pairs must name at least one (d, theta/direction) offset"
+            )
         for d, t in pairs:
-            glcm_offsets(d, t)  # raises ValueError on bad d / theta
+            # raises ValueError on bad d / theta / 3-D direction index
+            glcm_offsets(d, t) if self.ndim == 2 else glcm_offsets_3d(d, t)
         if self.quantize not in QUANTIZE_MODES:
             raise ValueError(
                 f"unknown quantize mode {self.quantize!r}; expected one of {QUANTIZE_MODES}"
@@ -135,8 +162,8 @@ class GLCMSpec:
         else:
             if self.region_shape is None:
                 raise ValueError(f'region={self.region!r} requires region_shape')
-            rh, rw = _shape2(self.region_shape, "region_shape")
-            object.__setattr__(self, "region_shape", (rh, rw))
+            rshape = _shape_nd(self.region_shape, "region_shape", self.ndim)
+            object.__setattr__(self, "region_shape", rshape)
             if self.region == "tiles":
                 if self.region_stride is not None:
                     raise ValueError(
@@ -144,16 +171,23 @@ class GLCMSpec:
                         "region_stride must be unset"
                     )
             else:
-                stride = (1, 1) if self.region_stride is None else self.region_stride
+                stride = (1,) * self.ndim if self.region_stride is None else (
+                    self.region_stride
+                )
                 object.__setattr__(
-                    self, "region_stride", _shape2(stride, "region_stride")
+                    self, "region_stride",
+                    _shape_nd(stride, "region_stride", self.ndim),
                 )
             # Pairs are counted within each region: every offset must fit.
-            for (d, t), (dy, dx) in zip(pairs, self.offsets()):
-                if dy >= rh or abs(dx) >= rw:
+            # The leading spatial delta is non-negative by construction
+            # (dy >= 0 in 2-D, dz >= 0 in 3-D); the rest may be negative.
+            for (d, t), off in zip(pairs, self.offsets()):
+                if off[0] >= rshape[0] or any(
+                    abs(o) >= s for o, s in zip(off[1:], rshape[1:])
+                ):
                     raise ValueError(
-                        f"offset (d={d}, theta={t}) → (dy={dy}, dx={dx}) does "
-                        f"not fit inside region_shape {(rh, rw)}"
+                        f"offset (d={d}, {t}) → {off} does not fit inside "
+                        f"region_shape {rshape}"
                     )
 
     @property
@@ -161,41 +195,51 @@ class GLCMSpec:
         return len(self.pairs)
 
     @property
-    def strides(self) -> tuple[int, int] | None:
+    def strides(self) -> tuple[int, ...] | None:
         """Effective region stride: tiles step by their own shape."""
         if self.region == "global":
             return None
         return self.region_shape if self.region == "tiles" else self.region_stride
 
-    def region_grid(self, h: int, w: int) -> tuple[int, ...]:
-        """The (gh, gw) region-grid for an (h, w) image; () for "global".
+    def region_grid(self, *dims: int) -> tuple[int, ...]:
+        """The region grid for ``dims`` spatial extents; () for "global".
 
-        Raises ValueError when the image cannot host the configured regions
-        (non-divisible tile partition, window larger than the image).
+        ``dims`` is (h, w) for ndim=2 or (d, h, w) for ndim=3. Raises
+        ValueError when the input cannot host the configured regions
+        (non-divisible tile partition, window larger than the input).
         """
         if self.region == "global":
             return ()
-        rh, rw = self.region_shape
-        if self.region == "tiles":
-            if h % rh or w % rw:
-                raise ValueError(
-                    f"image shape {(h, w)} not divisible into "
-                    f"region_shape={(rh, rw)} tiles"
-                )
-            return (h // rh, w // rw)
-        if rh > h or rw > w:
+        if len(dims) != self.ndim:
             raise ValueError(
-                f"window region_shape {(rh, rw)} exceeds image shape {(h, w)}"
+                f"expected {self.ndim} spatial extents for an ndim={self.ndim} "
+                f"spec, got {dims}"
             )
-        sy, sx = self.region_stride
-        return ((h - rh) // sy + 1, (w - rw) // sx + 1)
+        rshape = self.region_shape
+        if self.region == "tiles":
+            if any(s % r for s, r in zip(dims, rshape)):
+                raise ValueError(
+                    f"input shape {tuple(dims)} not divisible into "
+                    f"region_shape={rshape} tiles"
+                )
+            return tuple(s // r for s, r in zip(dims, rshape))
+        if any(r > s for r, s in zip(rshape, dims)):
+            raise ValueError(
+                f"window region_shape {rshape} exceeds input shape {tuple(dims)}"
+            )
+        return tuple(
+            (s - r) // st + 1 for s, r, st in zip(dims, rshape, self.region_stride)
+        )
 
-    def offsets(self) -> tuple[tuple[int, int], ...]:
-        """(dy, dx) pixel offsets for every (d, θ) pair, in pair order."""
-        return tuple(glcm_offsets(d, t) for d, t in self.pairs)
+    def offsets(self) -> tuple[tuple[int, ...], ...]:
+        """Per-axis spatial offsets for every pair, in pair order: (dy, dx)
+        tuples for ndim=2, (dz, dy, dx) tuples for ndim=3."""
+        if self.ndim == 2:
+            return tuple(glcm_offsets(d, t) for d, t in self.pairs)
+        return tuple(glcm_offsets_3d(d, t) for d, t in self.pairs)
 
     def single_pair(self) -> tuple[int, int]:
-        """The sole (d, θ) pair, for single-offset consumers (sharded GLCM)."""
+        """The sole offset pair, for single-offset consumers (sharded GLCM)."""
         if len(self.pairs) != 1:
             raise ValueError(
                 f"expected a single-offset spec, got {len(self.pairs)} pairs"

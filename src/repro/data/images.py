@@ -6,13 +6,27 @@ atomics). Fig 1(b): drastic changes (votes scatter — the easy case).
 
 Both are deterministic in (seed, index) and generated at any resolution
 (the paper sweeps 1024² … 16384²).
+
+The volumetric generators (``smooth_volume`` / ``random_volume``) mirror
+the same two regimes for (D, H, W) volumes — a CT/MRI-stack-like slowly
+varying field (trilinearly upsampled coarse noise: votes pile onto few
+bins, the conflict-heavy case) and an iid-noise volume (votes scatter) —
+feeding the ndim=3 GLCM workload and ``benchmarks/volume_throughput.py``.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["smooth_texture", "random_texture", "image_stream", "PAPER_SIZES"]
+__all__ = [
+    "smooth_texture",
+    "random_texture",
+    "image_stream",
+    "smooth_volume",
+    "random_volume",
+    "volume_stream",
+    "PAPER_SIZES",
+]
 
 PAPER_SIZES = (1024, 4096, 8192, 16384)
 
@@ -45,3 +59,56 @@ def image_stream(kind: str, size: int, count: int, seed: int = 0):
     gen = {"smooth": smooth_texture, "random": random_texture}[kind]
     for i in range(count):
         yield gen(size, seed=seed + i)
+
+
+def _shape3(shape) -> tuple[int, int, int]:
+    if isinstance(shape, int):
+        return (shape, shape, shape)
+    d, h, w = (int(s) for s in shape)
+    return d, h, w
+
+
+def _upsample_linear(arr: np.ndarray, axis: int, size: int) -> np.ndarray:
+    """1-D linear interpolation of ``arr`` along ``axis`` to ``size`` samples."""
+    n = arr.shape[axis]
+    idx = np.linspace(0, n - 1, size)
+    x0 = np.floor(idx).astype(int)
+    x1 = np.minimum(x0 + 1, n - 1)
+    f = idx - x0
+    bshape = [1] * arr.ndim
+    bshape[axis] = size
+    a0 = np.take(arr, x0, axis=axis)
+    a1 = np.take(arr, x1, axis=axis)
+    return a0 * (1 - f).reshape(bshape) + a1 * f.reshape(bshape)
+
+
+def smooth_volume(shape, seed: int = 0) -> np.ndarray:
+    """Fig 1(a) regime in 3-D: trilinearly-upsampled coarse noise → a slowly
+    varying (D, H, W) uint8 field (a synthetic CT-like stack — long-range
+    correlation along ALL three axes, the conflict-heavy voting case).
+
+    ``shape`` is (d, h, w) or an int (a cube).
+    """
+    d, h, w = _shape3(shape)
+    rng = np.random.default_rng(seed)
+    coarse = rng.normal(size=tuple(max(s // 16, 2) for s in (d, h, w)))
+    vol = coarse
+    for axis, size in enumerate((d, h, w)):
+        vol = _upsample_linear(vol, axis, size)
+    vol = vol + 0.02 * rng.normal(size=vol.shape)  # slight high-freq detail
+    lo, hi = vol.min(), vol.max()
+    return ((vol - lo) / max(hi - lo, 1e-9) * 255).astype(np.uint8)
+
+
+def random_volume(shape, seed: int = 0) -> np.ndarray:
+    """Fig 1(b) regime in 3-D: iid uniform gray levels, (D, H, W) uint8."""
+    d, h, w = _shape3(shape)
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 256, size=(d, h, w)).astype(np.uint8)
+
+
+def volume_stream(kind: str, shape, count: int, seed: int = 0):
+    """Yield ``count`` volumes of one regime (for the streamed pipeline)."""
+    gen = {"smooth": smooth_volume, "random": random_volume}[kind]
+    for i in range(count):
+        yield gen(shape, seed=seed + i)

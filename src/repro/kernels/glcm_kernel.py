@@ -31,7 +31,15 @@ Two kernels:
     matmuls). This is the paper's image-partitioning idea promoted from an
     internal blocking trick to the unit of output.
 
-Both kernels carry a **batch grid axis**: the grid is (B, steps) and the
+``glcm_volume_kernel`` (``_volume_kernel``) — the volumetric workload: a
+    (B, D, H, W) stack of 3-D volumes is processed as a grid over
+    ``(B, n_slabs)`` **depth slabs**, each slab voting all 13 unique 3-D
+    directions at once with the paper's R-copy privatized accumulators.
+    The inter-slice halo (dz > 0 directions) is the NEXT slab, DMA'd via a
+    second input Ref exactly like the fused kernel's next-row-tile — the
+    image-partitioning strategy promoted to the depth axis of a volume.
+
+The accumulating kernels carry a **batch grid axis**: the grid is (B, steps) and the
 output block index_map pins each image's accumulator to its batch slot, so a
 (B, H, W) stack is processed in ONE ``pallas_call`` launch instead of B —
 the launch-amortization that dominates serving throughput (see
@@ -58,12 +66,15 @@ __all__ = [
     "glcm_vote_pallas",
     "glcm_fused_pallas",
     "glcm_window_pallas",
+    "glcm_volume_pallas",
     "DEFAULT_CHUNK",
     "DEFAULT_COPIES",
+    "DEFAULT_SLAB_D",
 ]
 
 DEFAULT_CHUNK = 2048   # pair-stream chunk per grid step (multiple of 128)
 DEFAULT_COPIES = 4     # R, the paper's copy count
+DEFAULT_SLAB_D = 8     # depth slices per slab of the volume kernel
 
 
 def _onehot2d(v: jax.Array, levels: int, dtype=jnp.int8) -> jax.Array:
@@ -89,6 +100,17 @@ def _vote_matmul(r: jax.Array, a: jax.Array, levels: int, copies: int) -> jax.Ar
             R, A, (((0,), (0,)), ((), ())), preferred_element_type=jnp.int32
         )
     return acc
+
+
+def _vote_stream(r: jax.Array, a: jax.Array, levels: int, copies: int) -> jax.Array:
+    """``_vote_matmul`` for a stream whose length need not divide ``copies``:
+    pads both streams with dead votes (-1 → all-zero one-hot rows) first.
+    The pad length is shape-derived, so it stays static under tracing."""
+    pad = (-r.shape[0]) % copies
+    if pad:
+        r = jnp.concatenate([r, jnp.full((pad,), -1, jnp.int32)])
+        a = jnp.concatenate([a, jnp.full((pad,), -1, jnp.int32)])
+    return _vote_matmul(r, a, levels, copies)
 
 
 # ---------------------------------------------------------------------------
@@ -237,13 +259,9 @@ def _window_kernel(
         else:
             assoc = patch[: rh - dy, -dx:]
             ref = patch[dy:, : rw + dx]
-        a = assoc.reshape(-1)
-        r = ref.reshape(-1)
-        pad = (-a.shape[0]) % copies  # static: pair count is shape-derived
-        if pad:
-            a = jnp.concatenate([a, jnp.full((pad,), -1, jnp.int32)])
-            r = jnp.concatenate([r, jnp.full((pad,), -1, jnp.int32)])
-        o_ref[0, 0, 0, k, :, :] = _vote_matmul(r, a, levels, copies)
+        o_ref[0, 0, 0, k, :, :] = _vote_stream(
+            ref.reshape(-1), assoc.reshape(-1), levels, copies
+        )
 
 
 @functools.partial(
@@ -301,6 +319,157 @@ def glcm_window_pallas(
         out_shape=jax.ShapeDtypeStruct((b, gh, gw, n_off, levels, levels), jnp.int32),
         interpret=interpret,
     )(p)
+    return out if batched else out[0]
+
+
+# ---------------------------------------------------------------------------
+# Kernel 4: depth-slab volumetric voting — grid = (B, n_slabs), halo via the
+# next depth slab, R-copy privatized accumulators per slab
+# ---------------------------------------------------------------------------
+
+def _volume_kernel(
+    *refs,
+    levels: int,
+    copies: int,
+    offsets: tuple[tuple[int, int, int], ...],
+    slab_d: int,
+    height: int,
+    width: int,
+    depth: int,
+):
+    # refs is (cur, o) when every offset stays in-slab (max dz == 0, no
+    # halo input — half the HBM→VMEM traffic) or (cur, nxt, o) with the
+    # next-slab halo block.
+    cur_ref, o_ref = refs[0], refs[-1]
+    pid = pl.program_id(1)  # depth-slab step within the current volume
+
+    @pl.when(pid == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    cur = cur_ref[...].reshape(slab_d, height, width)
+    if len(refs) == 3:
+        nxt = refs[1][...].reshape(slab_d, height, width)
+        both = jnp.concatenate([cur, nxt], axis=0)  # (2·SD, H, W): slab+halo
+    else:
+        both = cur  # dz == 0 everywhere: dynamic_slice never leaves the slab
+
+    z_iota = jax.lax.broadcasted_iota(jnp.int32, (slab_d, height, width), 0)
+    y_iota = jax.lax.broadcasted_iota(jnp.int32, (slab_d, height, width), 1)
+    x_iota = jax.lax.broadcasted_iota(jnp.int32, (slab_d, height, width), 2)
+    gz = pid * slab_d + z_iota  # global depth of each slab voxel
+
+    # Associate one-hot source: built ONCE, shared by every direction (the
+    # fusion win, exactly as in the 2-D fused kernel); depth-padded voxels
+    # (gz >= depth) are masked to the dead bin.
+    a_flat = jnp.where(gz < depth, cur, -1).reshape(-1)
+
+    for k, (dz, dy, dx) in enumerate(offsets):  # static unroll, 13 directions
+        # Ref plane: depth shifted by dz (may spill into the halo slab), rows
+        # and cols rolled in-plane by (dy, dx) — dy may be NEGATIVE for the
+        # dz=+1 directions, which the roll+mask handles symmetrically.
+        # Wrapped/out-of-volume entries are masked to -1 (vote dropped) —
+        # paper Eq. (8)/(9)'s Pad region as masking instead of copies.
+        shifted = jax.lax.dynamic_slice(both, (dz, 0, 0), (slab_d, height, width))
+        shifted = jnp.roll(shifted, (-dy, -dx), axis=(1, 2))
+        ok = (
+            (gz + dz < depth)
+            & (y_iota + dy >= 0) & (y_iota + dy < height)
+            & (x_iota + dx >= 0) & (x_iota + dx < width)
+        )
+        r_flat = jnp.where(ok, shifted, -1).reshape(-1)
+        o_ref[0, k, :, :] += _vote_stream(r_flat, a_flat, levels, copies)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("levels", "offsets", "slab_d", "copies", "interpret"),
+)
+def glcm_volume_pallas(
+    vol: jax.Array,
+    *,
+    levels: int,
+    offsets: tuple[tuple[int, int, int], ...],
+    slab_d: int = DEFAULT_SLAB_D,
+    copies: int = 1,
+    interpret: bool = False,
+) -> jax.Array:
+    """One pass over quantized volume(s) → multi-direction 3-D GLCMs (int32).
+
+    ``vol`` is (D, H, W) → (n_offsets, L, L), or (B, D, H, W) →
+    (B, n_offsets, L, L); the batch is the leading grid axis, so a whole
+    stack of volumes is ONE kernel launch with the per-volume accumulator
+    selected by the output ``index_map``.
+
+    The grid is (B, n_slabs): each step DMAs one (slab_d, H, W) depth slab
+    to VMEM plus the NEXT slab as the inter-slice halo (``index_map``
+    clamped at the last slab; the clamp is safe because depths >= D are
+    masked in-kernel), so the Pallas pipeline double-buffers the HBM→VMEM
+    slab transfer against the previous slab's voting matmuls — the paper's
+    two-stream timeline along the depth axis. ``offsets`` are (dz, dy, dx)
+    voxel offsets with 0 <= dz <= slab_d (the halo reach); dy/dx may be
+    negative (rolled + masked in-plane). ``copies`` is the paper's R:
+    private (L, L) sub-accumulators per slab, summed before leaving the
+    kernel. Depth is padded to a slab multiple (padded slices masked). The
+    VMEM working set is 2·slab_d·H·W·4B (slabs) + the one-hot chunk —
+    independent of B and D, which only advance the DMA source.
+    """
+    if vol.ndim not in (3, 4):
+        raise ValueError(
+            f"expected (D, H, W) or (B, D, H, W) volume, got {vol.shape}"
+        )
+    batched = vol.ndim == 4
+    d, h, w = vol.shape[-3:]
+    for dz, dy, dx in offsets:
+        if not (0 <= dz <= slab_d):
+            raise ValueError(f"dz={dz} must be in [0, slab_d={slab_d}]")
+        if abs(dy) >= h or abs(dx) >= w:
+            raise ValueError(
+                f"in-plane offset (dy={dy}, dx={dx}) exceeds plane ({h}, {w})"
+            )
+    vols = vol.astype(jnp.int32)
+    if not batched:
+        vols = vols[None]
+    pad_d = (-d) % slab_d
+    volp = jnp.pad(vols, ((0, 0), (0, pad_d), (0, 0), (0, 0)), constant_values=-1)
+    b, dp, _, _ = volp.shape
+    steps = dp // slab_d
+    n_off = len(offsets)
+
+    in_specs = [pl.BlockSpec((1, slab_d, h, w), lambda bi, i: (bi, i, 0, 0))]
+    args = [volp]
+    if max((dz for dz, _, _ in offsets), default=0) > 0:
+        # Halo: the NEXT depth slab of the SAME volume (clamped at the
+        # last slab; safe — out-of-volume depths are masked in-kernel).
+        # Skipped entirely when every offset stays in-slab (dz == 0): the
+        # halo block would never be read, only DMA'd.
+        in_specs.append(
+            pl.BlockSpec(
+                (1, slab_d, h, w),
+                lambda bi, i: (bi, jnp.minimum(i + 1, steps - 1), 0, 0),
+            )
+        )
+        args.append(volp)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _volume_kernel,
+            levels=levels,
+            copies=copies,
+            offsets=tuple(offsets),
+            slab_d=slab_d,
+            height=h,
+            width=w,
+            depth=d,
+        ),
+        grid=(b, steps),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, n_off, levels, levels), lambda bi, i: (bi, 0, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, n_off, levels, levels), jnp.int32),
+        interpret=interpret,
+    )(*args)
     return out if batched else out[0]
 
 

@@ -21,7 +21,9 @@ from repro.kernels import ref as _ref
 from repro.kernels.glcm_kernel import (
     DEFAULT_CHUNK,
     DEFAULT_COPIES,
+    DEFAULT_SLAB_D,
     glcm_fused_pallas,
+    glcm_volume_pallas,
     glcm_vote_pallas,
     glcm_window_pallas,
 )
@@ -30,6 +32,7 @@ from repro.kernels.histogram_kernel import histogram_pallas
 __all__ = [
     "glcm_pallas",
     "glcm_pallas_multi",
+    "glcm_pallas_volume",
     "glcm_pallas_windowed",
     "histogram",
     "onehot_count",
@@ -50,6 +53,7 @@ def glcm_pallas(
     d: int = 1,
     theta: int = 0,
     *,
+    offset: tuple[int, ...] | None = None,
     chunk: int = DEFAULT_CHUNK,
     copies: int = DEFAULT_COPIES,
     interpret: bool | None = None,
@@ -57,14 +61,24 @@ def glcm_pallas(
     """GLCM of quantized image(s) via the pair-stream voting kernel.
 
     Pair extraction (paper Eq. (2) addressing) happens as fused XLA slices;
-    voting happens in the Pallas kernel. ``img`` is (H, W) → (L, L) int32
-    counts, or (B, H, W) → (B, L, L) computed in one kernel launch over a
-    (B, steps) grid.
+    voting happens in the Pallas kernel — which never sees the spatial rank,
+    so the same kernel serves images AND volumes. ``img`` is (H, W) →
+    (L, L) int32 counts, or (B, H, W) → (B, L, L) computed in one kernel
+    launch over a (B, steps) grid; with ``offset=`` (an explicit (dy, dx) or
+    (dz, dy, dx) tuple overriding ``(d, theta)``), a (D, H, W) volume or
+    (B, D, H, W) stack is voted the same way.
     """
-    if img.ndim not in (2, 3):
-        raise ValueError(f"expected (H, W) or (B, H, W) image, got {img.shape}")
-    assoc, rf = _ref.pair_planes(img, d, theta)
-    lead = img.shape[:-2]
+    off = tuple(int(v) for v in offset) if offset is not None else (
+        _ref.glcm_offsets(d, theta)
+    )
+    nd = len(off)
+    if img.ndim not in (nd, nd + 1):
+        raise ValueError(
+            f"expected a {nd}-D input or a batched {nd + 1}-D stack for "
+            f"offset {off}, got shape {img.shape}"
+        )
+    assoc, rf = _ref.pair_planes_nd(img, off)
+    lead = img.shape[:-nd]
     return glcm_vote_pallas(
         assoc.reshape(lead + (-1,)).astype(jnp.int32),
         rf.reshape(lead + (-1,)).astype(jnp.int32),
@@ -100,6 +114,40 @@ def glcm_pallas_multi(
         levels=levels,
         offsets=offsets,
         tile_h=tile_h,
+        copies=copies,
+        interpret=should_interpret(interpret),
+    )
+
+
+def glcm_pallas_volume(
+    vol: jax.Array,
+    levels: int,
+    pairs: tuple[tuple[int, int], ...],
+    *,
+    offsets: tuple[tuple[int, int, int], ...] | None = None,
+    slab_d: int | None = None,
+    copies: int = 1,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Multi-direction 3-D GLCM in ONE volume pass via the depth-slab kernel.
+
+    ``pairs`` are (d, direction) tuples over the 13 unique 3-D directions
+    (``ref.DIRECTIONS_3D``); ``offsets`` passes explicit (dz, dy, dx) voxel
+    offsets instead. ``vol`` is (D, H, W) → (len(pairs), L, L) int32, or a
+    (B, D, H, W) stack → (B, len(pairs), L, L) — the batch rides the
+    kernel's leading grid axis, so the whole stack is one launch.
+    ``slab_d`` defaults to max(8, largest dz) rounded up to 8.
+    """
+    if offsets is None:
+        offsets = tuple(_ref.glcm_offsets_3d(d, k) for d, k in pairs)
+    max_dz = max((dz for dz, _, _ in offsets), default=1)
+    if slab_d is None:
+        slab_d = max(DEFAULT_SLAB_D, -(-max_dz // 8) * 8)
+    return glcm_volume_pallas(
+        vol,
+        levels=levels,
+        offsets=tuple(offsets),
+        slab_d=slab_d,
         copies=copies,
         interpret=should_interpret(interpret),
     )

@@ -26,9 +26,13 @@ import jax.numpy as jnp
 
 __all__ = [
     "OFFSETS",
+    "DIRECTIONS_3D",
     "glcm_offsets",
+    "glcm_offsets_3d",
     "pair_planes",
+    "pair_planes_nd",
     "glcm_reference",
+    "glcm_reference_nd",
     "glcm_multi_reference",
     "histogram_reference",
     "onehot_count_reference",
@@ -44,6 +48,28 @@ OFFSETS: dict[int, tuple[int, int]] = {
 
 PAPER_THETAS = (0, 45, 90, 135)
 
+# The 13 unique 3-D co-occurrence directions: one representative per
+# {v, -v} pair of the 26-neighborhood.  Directions 0..3 are the paper's
+# four in-plane thetas (0°/45°/90°/135° with dz = 0, in that order), so
+# every 2-D workload embeds verbatim as the dz = 0 prefix; directions
+# 4..12 are the nine inter-slice offsets with dz = +1 (the canonical
+# half: the first nonzero component of every entry is positive).
+DIRECTIONS_3D: tuple[tuple[int, int, int], ...] = (
+    (0, 0, 1),
+    (0, 1, -1),
+    (0, 1, 0),
+    (0, 1, 1),
+    (1, -1, -1),
+    (1, -1, 0),
+    (1, -1, 1),
+    (1, 0, -1),
+    (1, 0, 0),
+    (1, 0, 1),
+    (1, 1, -1),
+    (1, 1, 0),
+    (1, 1, 1),
+)
+
 
 def glcm_offsets(d: int, theta: int) -> tuple[int, int]:
     """Pixel offset (dy, dx) for distance ``d`` and direction ``theta``."""
@@ -54,6 +80,50 @@ def glcm_offsets(d: int, theta: int) -> tuple[int, int]:
     except KeyError:
         raise ValueError(f"theta must be one of {sorted(OFFSETS)}, got {theta}") from None
     return d * dy, d * dx
+
+
+def glcm_offsets_3d(d: int, direction: int) -> tuple[int, int, int]:
+    """Voxel offset (dz, dy, dx) for distance ``d`` and one of the 13 unique
+    3-D directions (``DIRECTIONS_3D`` index; 0..3 are the in-plane thetas)."""
+    if d < 1:
+        raise ValueError(f"distance d must be >= 1, got {d}")
+    if not (0 <= direction < len(DIRECTIONS_3D)):
+        raise ValueError(
+            f"3-D direction must be in [0, {len(DIRECTIONS_3D) - 1}], got {direction}"
+        )
+    dz, dy, dx = DIRECTIONS_3D[direction]
+    return d * dz, d * dy, d * dx
+
+
+def pair_planes_nd(
+    img: jax.Array, offset: tuple[int, ...]
+) -> tuple[jax.Array, jax.Array]:
+    """Rank-general ``pair_planes``: aligned (assoc, ref) planes for an
+    explicit per-axis ``offset`` over the trailing ``len(offset)`` axes.
+
+    ``offset`` is (dy, dx) for images or (dz, dy, dx) for volumes; any
+    component may be negative.  Leading batch dims are preserved (one fused
+    slice serves the whole stack).
+    """
+    nd = len(offset)
+    if img.ndim < nd:
+        raise ValueError(
+            f"expected (..., {nd} spatial axes), got shape {img.shape}"
+        )
+    dims = img.shape[-nd:]
+    for delta, size in zip(offset, dims):
+        if abs(delta) >= size:
+            raise ValueError(f"offset {offset} exceeds image shape {img.shape}")
+    assoc_ix: list = [Ellipsis]
+    ref_ix: list = [Ellipsis]
+    for delta, size in zip(offset, dims):
+        if delta >= 0:
+            assoc_ix.append(slice(0, size - delta))
+            ref_ix.append(slice(delta, size))
+        else:
+            assoc_ix.append(slice(-delta, size))
+            ref_ix.append(slice(0, size + delta))
+    return img[tuple(assoc_ix)], img[tuple(ref_ix)]
 
 
 def pair_planes(img: jax.Array, d: int, theta: int) -> tuple[jax.Array, jax.Array]:
@@ -70,18 +140,7 @@ def pair_planes(img: jax.Array, d: int, theta: int) -> tuple[jax.Array, jax.Arra
     """
     if img.ndim < 2:
         raise ValueError(f"expected (..., H, W) image, got shape {img.shape}")
-    h, w = img.shape[-2:]
-    dy, dx = glcm_offsets(d, theta)
-    if dy >= h or abs(dx) >= w:
-        raise ValueError(f"offset ({dy},{dx}) exceeds image shape {img.shape}")
-    ys = slice(0, h - dy)
-    if dx >= 0:
-        assoc = img[..., ys, : w - dx]
-        ref = img[..., dy:, dx:]
-    else:
-        assoc = img[..., ys, -dx:]
-        ref = img[..., dy:, : w + dx]
-    return assoc, ref
+    return pair_planes_nd(img, glcm_offsets(d, theta))
 
 
 def glcm_reference(
@@ -100,6 +159,28 @@ def glcm_reference(
     (paper Eq. (3): pos = ref * L + assoc).
     """
     assoc, ref = pair_planes(img, d, theta)
+    pos = (ref.astype(jnp.int32) * levels + assoc.astype(jnp.int32)).reshape(-1)
+    flat = jnp.zeros((levels * levels,), dtype).at[pos].add(1)
+    glcm = flat.reshape(levels, levels)
+    if symmetric:
+        glcm = glcm + glcm.T
+    if normalize:
+        glcm = glcm / jnp.maximum(glcm.sum(), 1)
+    return glcm
+
+
+def glcm_reference_nd(
+    img: jax.Array,
+    levels: int,
+    offset: tuple[int, ...],
+    *,
+    symmetric: bool = False,
+    normalize: bool = False,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Rank-general Scheme-1 oracle: scatter-add voting for an explicit
+    (dy, dx) / (dz, dy, dx) offset. Returns (levels, levels)."""
+    assoc, ref = pair_planes_nd(img, offset)
     pos = (ref.astype(jnp.int32) * levels + assoc.astype(jnp.int32)).reshape(-1)
     flat = jnp.zeros((levels * levels,), dtype).at[pos].add(1)
     glcm = flat.reshape(levels, levels)

@@ -96,7 +96,8 @@ def perplexity(cfg, params, tokens: np.ndarray) -> float:
 @dataclasses.dataclass(frozen=True)
 class GLCMServeConfig:
     levels: int = 32
-    image_shape: tuple[int, int] = (256, 256)
+    # (H, W) for image specs, (D, H, W) for volumetric (ndim=3) specs.
+    image_shape: tuple[int, ...] = (256, 256)
     batch_size: int = 8
     pairs: tuple[tuple[int, int], ...] = ((1, 0), (1, 45), (4, 0), (4, 45))
     scheme: str = "auto"          # any registered repro.core.backends scheme
@@ -107,7 +108,8 @@ class GLCMServeConfig:
     # Spec-native configuration: when given, ``spec`` overrides the
     # levels/pairs/scheme/quantize fields above (which remain as the
     # keyword-compatible legacy surface). Region-structured specs
-    # (spec.region of "tiles"/"window") serve per-request texture maps.
+    # (spec.region of "tiles"/"window") serve per-request texture maps;
+    # volumetric specs (spec.ndim == 3) serve (D, H, W) volume requests.
     spec: GLCMSpec | None = None
 
     def __post_init__(self):
@@ -115,7 +117,13 @@ class GLCMServeConfig:
             raise ValueError("batch_size must be >= 1")
         if self.spec is not None and not isinstance(self.spec, GLCMSpec):
             raise ValueError(f"cfg.spec must be a GLCMSpec, got {self.spec!r}")
-        self.glcm_spec()  # validate the legacy fields (or the explicit spec) now
+        spec = self.glcm_spec()  # validate legacy fields (or explicit spec) now
+        if len(self.image_shape) != spec.ndim:
+            raise ValueError(
+                f"image_shape {tuple(self.image_shape)} has rank "
+                f"{len(self.image_shape)} but the engine spec is "
+                f"ndim={spec.ndim}"
+            )
 
     def glcm_spec(self) -> GLCMSpec:
         """The GLCMSpec this engine serves (explicit ``spec`` wins)."""
@@ -132,7 +140,11 @@ class GLCMServeConfig:
 class GLCMEngine:
     """Request-coalescing texture-feature server.
 
-    ``submit(image)`` enqueues one (H, W) request and returns a ticket; a
+    ``submit(image)`` enqueues one request — an (H, W) image, or a
+    (D, H, W) volume when the engine's spec is volumetric (``ndim=3``) —
+    validated eagerly (rank/shape/dtype) so malformed requests fail at
+    submit time, never inside the batched jitted dispatch — and returns a
+    ticket; a
     full batch auto-dispatches. ``flush()`` forces dispatch of a partial
     batch (padded to ``batch_size`` via ``core.pipeline.coalesce_images``,
     padding results dropped). ``result(ticket)`` returns the request's
@@ -157,9 +169,8 @@ class GLCMEngine:
 
         self.cfg = cfg
         self.spec = cfg.glcm_spec()
-        h, w = cfg.image_shape
         self.plan = compile_plan(
-            self.spec, (cfg.batch_size, h, w), features=cfg.features
+            self.spec, (cfg.batch_size, *cfg.image_shape), features=cfg.features
         )
         self._pending: list[tuple[int, np.ndarray]] = []
         self._pending_tickets: set[int] = set()   # O(1) queued-ticket lookup
@@ -169,10 +180,29 @@ class GLCMEngine:
         self.images_served = 0
 
     def submit(self, image: np.ndarray) -> int:
+        # Validate rank/shape/dtype EAGERLY: a malformed request must fail at
+        # submit time with a clear error, never later inside the batched
+        # jitted dispatch (where it would take the whole batch down with an
+        # opaque trace-time failure).
         image = np.asarray(image)
-        if image.shape != tuple(self.cfg.image_shape):
+        want = tuple(self.cfg.image_shape)
+        if image.ndim != len(want):
             raise ValueError(
-                f"request shape {image.shape} != engine shape {self.cfg.image_shape}")
+                f"request rank {image.ndim} (shape {image.shape}) != engine "
+                f"rank {len(want)}: this engine serves "
+                f"{'(D, H, W) volumes' if len(want) == 3 else '(H, W) images'} "
+                f"of shape {want}"
+            )
+        if image.shape != want:
+            raise ValueError(
+                f"request shape {image.shape} != engine shape {want}")
+        if not (np.issubdtype(image.dtype, np.integer)
+                or np.issubdtype(image.dtype, np.floating)
+                or np.issubdtype(image.dtype, np.bool_)):
+            raise ValueError(
+                f"request dtype {image.dtype} is not a numeric gray-level "
+                f"type; expected an integer or float array"
+            )
         ticket = self._next_ticket
         self._next_ticket += 1
         self._pending.append((ticket, image))

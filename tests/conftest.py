@@ -23,6 +23,21 @@ def brute_force_glcm(img: np.ndarray, levels: int, d: int, theta: int) -> np.nda
     return out
 
 
+def brute_force_glcm_3d(vol: np.ndarray, levels: int, off) -> np.ndarray:
+    """The obviously-correct O(N³) loop over voxel pairs — paper Eq. (1)–(3)
+    generalized to (dz, dy, dx) addressing (the 3-D GLCM oracle)."""
+    dz, dy, dx = off
+    d, h, w = vol.shape
+    out = np.zeros((levels, levels), np.int64)
+    for z in range(d):
+        for y in range(h):
+            for x in range(w):
+                zz, yy, xx = z + dz, y + dy, x + dx
+                if 0 <= zz < d and 0 <= yy < h and 0 <= xx < w:
+                    out[vol[zz, yy, xx], vol[z, y, x]] += 1
+    return out
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

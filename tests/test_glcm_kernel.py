@@ -9,6 +9,7 @@ from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels.glcm_kernel import (
     glcm_fused_pallas,
+    glcm_volume_pallas,
     glcm_vote_pallas,
     glcm_window_pallas,
 )
@@ -190,6 +191,130 @@ def test_ops_windowed_wrapper_matches_multi(rng):
     want = np.asarray(kops.glcm_pallas_multi(jnp.asarray(img), levels, pairs,
                                              interpret=True))
     np.testing.assert_array_equal(got[0, 0], want)
+
+
+# ---------------------------------------------------------------------------
+# Depth-slab volume kernel (3-D co-occurrence)
+# ---------------------------------------------------------------------------
+
+from conftest import brute_force_glcm_3d as _np_glcm_3d  # noqa: E402
+
+
+@pytest.mark.parametrize("shape", [(4, 8, 8), (11, 6, 10), (16, 9, 13)])
+@pytest.mark.parametrize("levels", [8, 16])
+def test_volume_kernel_all_13_directions(rng, shape, levels):
+    vol = rng.integers(0, levels, size=shape).astype(np.int32)
+    got = np.asarray(
+        glcm_volume_pallas(
+            jnp.asarray(vol), levels=levels, offsets=kref.DIRECTIONS_3D,
+            slab_d=4, interpret=True,
+        )
+    )
+    assert got.shape == (13, levels, levels)
+    for k, off in enumerate(kref.DIRECTIONS_3D):
+        np.testing.assert_array_equal(
+            got[k], _np_glcm_3d(vol, levels, off), err_msg=f"dir {k}"
+        )
+
+
+def test_volume_kernel_batch_grid(rng):
+    """A (B, D, H, W) stack in ONE launch == per-volume results stacked."""
+    levels = 8
+    vols = rng.integers(0, levels, size=(3, 6, 8, 10)).astype(np.int32)
+    offs = (kref.DIRECTIONS_3D[4], kref.DIRECTIONS_3D[9])
+    got = np.asarray(
+        glcm_volume_pallas(
+            jnp.asarray(vols), levels=levels, offsets=offs, slab_d=4,
+            interpret=True,
+        )
+    )
+    assert got.shape == (3, 2, levels, levels)
+    for b in range(3):
+        for k, off in enumerate(offs):
+            np.testing.assert_array_equal(got[b, k], _np_glcm_3d(vols[b], levels, off))
+
+
+@pytest.mark.parametrize("copies", [1, 2, 4])
+def test_volume_kernel_copies_invariant(rng, copies):
+    """R sub-accumulators are a pure scheduling knob: results identical."""
+    levels = 8
+    vol = rng.integers(0, levels, size=(8, 10, 12)).astype(np.int32)
+    base = np.asarray(
+        glcm_volume_pallas(
+            jnp.asarray(vol), levels=levels, offsets=kref.DIRECTIONS_3D[:6],
+            slab_d=4, copies=1, interpret=True,
+        )
+    )
+    got = np.asarray(
+        glcm_volume_pallas(
+            jnp.asarray(vol), levels=levels, offsets=kref.DIRECTIONS_3D[:6],
+            slab_d=4, copies=copies, interpret=True,
+        )
+    )
+    np.testing.assert_array_equal(got, base)
+
+
+def test_volume_kernel_inplane_only_skips_halo(rng):
+    """All-dz=0 offsets take the single-input (no halo DMA) kernel path and
+    still match the oracle (per-slice sums)."""
+    levels = 8
+    vol = rng.integers(0, levels, size=(6, 8, 10)).astype(np.int32)
+    offs = kref.DIRECTIONS_3D[:4]  # the four in-plane directions
+    got = np.asarray(
+        glcm_volume_pallas(
+            jnp.asarray(vol), levels=levels, offsets=offs, slab_d=4,
+            interpret=True,
+        )
+    )
+    for k, off in enumerate(offs):
+        np.testing.assert_array_equal(got[k], _np_glcm_3d(vol, levels, off))
+
+
+def test_volume_kernel_deep_halo(rng):
+    """dz = 2 (a d=2 inter-slice direction) spills two slices into the halo."""
+    levels = 8
+    vol = rng.integers(0, levels, size=(7, 6, 8)).astype(np.int32)
+    off = (2, -2, 2)  # d=2, direction (1, -1, 1)
+    got = np.asarray(
+        glcm_volume_pallas(
+            jnp.asarray(vol), levels=levels, offsets=(off,), slab_d=4,
+            interpret=True,
+        )
+    )
+    np.testing.assert_array_equal(got[0], _np_glcm_3d(vol, levels, off))
+
+
+def test_volume_kernel_bad_args(rng):
+    vol = jnp.zeros((4, 8, 8), jnp.int32)
+    with pytest.raises(ValueError, match="slab_d"):
+        glcm_volume_pallas(
+            vol, levels=8, offsets=((5, 0, 0),), slab_d=4, interpret=True
+        )
+    with pytest.raises(ValueError, match="exceeds"):
+        glcm_volume_pallas(
+            vol, levels=8, offsets=((1, 8, 0),), slab_d=4, interpret=True
+        )
+    with pytest.raises(ValueError, match="volume"):
+        glcm_volume_pallas(
+            jnp.zeros((8, 8), jnp.int32), levels=8, offsets=((1, 0, 0),),
+            interpret=True,
+        )
+
+
+def test_ops_volume_wrapper_matches_pair_stream(rng):
+    """glcm_pallas_volume == the rank-general pair-stream kernel per offset."""
+    levels = 8
+    vol = rng.integers(0, levels, size=(6, 9, 11)).astype(np.int32)
+    pairs = ((1, 0), (1, 6), (2, 12))
+    got = np.asarray(
+        kops.glcm_pallas_volume(jnp.asarray(vol), levels, pairs, interpret=True)
+    )
+    for k, (d, direction) in enumerate(pairs):
+        off = kref.glcm_offsets_3d(d, direction)
+        want = np.asarray(
+            kops.glcm_pallas(jnp.asarray(vol), levels, offset=off, interpret=True)
+        )
+        np.testing.assert_array_equal(got[k], want)
 
 
 @pytest.mark.parametrize("levels", [8, 32, 128])

@@ -47,3 +47,122 @@ def test_bad_levels():
         quantize_uniform(jnp.zeros((4, 4)), 1)
     with pytest.raises(ValueError):
         quantize_uniform(jnp.zeros((4, 4)), 257)
+
+
+# ---------------------------------------------------------------------------
+# quantize_equalized edge cases: constant images, fewer distinct values than
+# levels, non-uint8 float input. Deterministic versions always run; the
+# hypothesis property sweeps ride along when the dev-only dep is installed
+# (requirements-dev.txt) — never skipping the rest of this module.
+# ---------------------------------------------------------------------------
+
+
+def _in_range(q: np.ndarray, levels: int) -> None:
+    assert q.dtype == np.int32
+    assert q.min() >= 0 and q.max() <= levels - 1
+
+
+@pytest.mark.parametrize("value", [0.0, 7.0, -3.5, 1e6])
+def test_equalized_constant_image(value):
+    """A constant image must quantize without NaN/overflow: every pixel lands
+    in ONE valid bin (the whole population shares one quantile)."""
+    for levels in (2, 8, 32):
+        q = np.asarray(quantize_equalized(jnp.full((9, 13), value), levels))
+        _in_range(q, levels)
+        assert len(np.unique(q)) == 1
+
+
+def test_equalized_fewer_distinct_values_than_levels(rng):
+    """With k < levels distinct values the map must stay deterministic,
+    monotone and valid — at most k occupied bins, never an invented level."""
+    values = np.array([-4.0, 0.25, 3.0], np.float32)           # k = 3 < 8
+    img = values[rng.integers(0, 3, size=(16, 16))]
+    q = np.asarray(quantize_equalized(jnp.asarray(img), 8))
+    _in_range(q, 8)
+    assert len(np.unique(q)) <= 3
+    per_value = {
+        float(v): np.unique(q[img == v]) for v in values
+    }
+    assert all(len(bins) == 1 for bins in per_value.values())
+    ordered = [per_value[float(v)][0] for v in values]
+    assert ordered == sorted(ordered)
+
+
+def test_equalized_float_input_is_rank_based(rng):
+    """Equalization is rank-based: affine rescaling of a float image (the
+    non-uint8 production case) must not change the binning."""
+    img = rng.normal(size=(24, 24)).astype(np.float32)
+    q = np.asarray(quantize_equalized(jnp.asarray(img), 8))
+    q_affine = np.asarray(quantize_equalized(jnp.asarray(img * 37.5 - 400), 8))
+    _in_range(q, 8)
+    np.testing.assert_array_equal(q, q_affine)
+
+
+try:  # hypothesis is a dev-only dep; the sweeps below are additive coverage
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = dict(max_examples=25, deadline=None)
+    shape_st = st.tuples(st.integers(2, 24), st.integers(2, 24))
+    levels_st = st.sampled_from([2, 8, 32])
+
+    @hypothesis.given(levels=levels_st, shape=shape_st, value=st.floats(
+        min_value=-1e6, max_value=1e6, allow_nan=False))
+    @hypothesis.settings(**SETTINGS)
+    def test_equalized_constant_image_property(levels, shape, value):
+        q = np.asarray(quantize_equalized(jnp.full(shape, value), levels))
+        _in_range(q, levels)
+        assert len(np.unique(q)) == 1
+
+    @hypothesis.given(levels=levels_st, data=st.data())
+    @hypothesis.settings(**SETTINGS)
+    def test_equalized_sparse_values_property(levels, data):
+        """k < levels distinct values: ≤ k occupied bins, per-value
+        determinism, monotone in value."""
+        k = data.draw(st.integers(1, max(levels - 1, 1)))
+        values = np.sort(data.draw(hnp.arrays(
+            np.float32, (k,),
+            elements=st.floats(min_value=-1e4, max_value=1e4,
+                               allow_nan=False, width=32),
+            unique=True,
+        )))
+        shape = data.draw(shape_st)
+        idx = data.draw(
+            hnp.arrays(np.int64, shape, elements=st.integers(0, k - 1))
+        )
+        img = values[idx]
+        q = np.asarray(quantize_equalized(jnp.asarray(img), levels))
+        _in_range(q, levels)
+        assert len(np.unique(q)) <= k
+        per_value = {}
+        for v, b in zip(img.reshape(-1), q.reshape(-1)):
+            per_value.setdefault(float(v), set()).add(int(b))
+        assert all(len(bins) == 1 for bins in per_value.values())
+        ordered = [next(iter(per_value[v])) for v in sorted(per_value)]
+        assert ordered == sorted(ordered)
+
+    @hypothesis.given(levels=levels_st, data=st.data())
+    @hypothesis.settings(**SETTINGS)
+    def test_equalized_affine_invariance_property(levels, data):
+        # Exact-arithmetic affine maps only: integer-valued images scaled by
+        # a power of two and shifted by an integer are bit-exact in float32,
+        # so the rank transform is provably unchanged. (Arbitrary float
+        # scale/shift can collapse nearly-equal values or nudge one across
+        # a histogram-bin edge — a float32 artifact, not a property bug.)
+        img = data.draw(hnp.arrays(
+            np.float32, shape_st, elements=st.integers(0, 255).map(float),
+        ))
+        scale = 2.0 ** data.draw(st.integers(-2, 4))
+        shift = float(data.draw(st.integers(-1024, 1024)))
+        q = np.asarray(quantize_equalized(jnp.asarray(img), levels))
+        q_affine = np.asarray(
+            quantize_equalized(jnp.asarray(img * scale + shift), levels)
+        )
+        _in_range(q, levels)
+        np.testing.assert_array_equal(q, q_affine)

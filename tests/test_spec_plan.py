@@ -147,6 +147,27 @@ def test_repeated_requests_do_not_retrace(rng):
         assert plan.fn._cache_size() == 1
 
 
+def test_plan_cache_hit_rate():
+    """hit_rate = hits / (hits + misses); 0.0 before any lookup."""
+    old_limit = plan_cache_limit()
+    plan_cache_clear()
+    spec = GLCMSpec(levels=8, scheme="onehot")
+    try:
+        assert plan_cache_stats()["hit_rate"] == 0.0
+        compile_plan(spec, (8, 8))                 # miss
+        assert plan_cache_stats()["hit_rate"] == 0.0
+        compile_plan(spec, (8, 8))                 # hit
+        compile_plan(spec, (8, 8))                 # hit
+        stats = plan_cache_stats()
+        assert stats["hit_rate"] == pytest.approx(2 / 3)
+        assert stats["hit_rate"] == pytest.approx(
+            stats["hits"] / (stats["hits"] + stats["misses"])
+        )
+    finally:
+        plan_cache_limit(old_limit)
+        plan_cache_clear()
+
+
 def test_plan_cache_lru_bound_and_evictions():
     """The cache is a bounded LRU: a long-lived server seeing many shapes
     must not leak compiled programs, and evictions are surfaced in stats."""
@@ -160,7 +181,7 @@ def test_plan_cache_lru_bound_and_evictions():
         p12 = compile_plan(spec, (8, 12))          # evicts (8, 8)
         stats = plan_cache_stats()
         assert stats == {"hits": 0, "misses": 3, "evictions": 1,
-                         "size": 2, "limit": 2}
+                         "hit_rate": 0.0, "size": 2, "limit": 2}
         # (8, 8) was evicted → recompiled fresh; this in turn evicts (8, 10)
         compile_plan(spec, (8, 8))
         assert plan_cache_stats()["evictions"] == 2
