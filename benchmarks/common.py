@@ -32,11 +32,37 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 
 
 def emit(name: str, us_per_call: float, derived: str = "", **extra) -> None:
-    """Print one CSV row and record it (plus structured ``extra`` fields)."""
+    """Print one CSV row and record it (plus structured ``extra`` fields).
+
+    Every row automatically carries the executing jax backend so a results
+    file read in isolation says WHERE its numbers came from; callers add
+    workload metadata (scheme, accumulator dtype, fusion flags) via
+    ``extra`` or :func:`plan_row_fields`.
+    """
     RESULTS.append(
-        {"name": name, "us_per_call": float(us_per_call), "derived": derived, **extra}
+        {
+            "name": name,
+            "us_per_call": float(us_per_call),
+            "derived": derived,
+            "jax_backend": jax.default_backend(),
+            **extra,
+        }
     )
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def plan_row_fields(plan) -> dict:
+    """Execution metadata of a compiled ``GLCMPlan`` for ``emit(**extra)``:
+    the resolved backend, the accumulator-dtype policy, and the fusion/
+    host-dispatch flags — so every benchmark row names the code path that
+    produced its number, not just the requested scheme."""
+    return {
+        "backend": plan.spec.scheme,
+        "accum": plan.spec.accum,
+        "fused_quantize": bool(plan.fused_quantize),
+        "host_native": bool(plan.host_native),
+        "tuned": plan.tuned.backend if plan.tuned is not None else None,
+    }
 
 
 def reset_results() -> None:

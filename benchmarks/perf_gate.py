@@ -1,0 +1,140 @@
+"""Perf ratchet: fail CI when a headline speedup ratio regresses.
+
+    PYTHONPATH=src python -m benchmarks.perf_gate \
+        [--baseline BENCH_glcm.json] [--out BENCH_fresh.json] [--noise 0.35]
+
+The gate re-measures the headline benchmarks FRESH on the current machine —
+both the baseline-of-the-ratio (serial CPU / batch B=1) and the accelerated
+path in the SAME run — and compares the resulting *ratios* against the
+committed ``BENCH_glcm.json``. Ratios are machine-speed-independent: a
+faster/slower CI host scales numerator and denominator together, so a ratio
+drop means the CODE got relatively slower, not the machine. Absolute µs
+columns are never compared.
+
+Gated metrics (present-in-both only; a metric missing from the committed
+file is recorded, not gated — the ratchet only tightens):
+
+  * ``speedups.vs_serial_cpu`` (per resolution) — the paper's Fig. 5
+    headline, best accelerated path vs the serial scatter loop.
+  * ``speedups.batch_vs_b1`` (per scheme × batch) — dispatch-amortization
+    curve of the serving path.
+
+A fresh ratio may undershoot the committed one by up to ``--noise``
+(default 35% — single-core CI hosts jitter; the committed numbers are from
+an idle machine) before the gate fails. Exits nonzero listing every
+regression; always writes the fresh results file for artifact upload.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _flatten(tree: dict, prefix: str = "") -> dict[str, float]:
+    out: dict[str, float] = {}
+    for k, v in tree.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flatten(v, f"{key}/"))
+        elif isinstance(v, (int, float)):
+            out[key] = float(v)
+    return out
+
+
+def gate(
+    committed: dict, fresh: dict, noise: float
+) -> tuple[list[str], list[str]]:
+    """Compare gated ratio metrics; returns (regressions, report_lines)."""
+    gated_sections = ("vs_serial_cpu", "batch_vs_b1")
+    regressions: list[str] = []
+    report: list[str] = []
+    for section in gated_sections:
+        base = _flatten(committed.get("speedups", {}).get(section, {}))
+        new = _flatten(fresh.get("speedups", {}).get(section, {}))
+        for key in sorted(base):
+            if key not in new:
+                report.append(f"  {section}/{key}: missing from fresh run")
+                regressions.append(f"{section}/{key} (missing)")
+                continue
+            floor = base[key] * (1.0 - noise)
+            status = "OK" if new[key] >= floor else "REGRESSION"
+            report.append(
+                f"  {section}/{key}: committed={base[key]:.3f} "
+                f"fresh={new[key]:.3f} floor={floor:.3f} {status}"
+            )
+            if new[key] < floor:
+                regressions.append(
+                    f"{section}/{key}: {new[key]:.3f} < floor {floor:.3f} "
+                    f"(committed {base[key]:.3f}, noise {noise:.0%})"
+                )
+        for key in sorted(set(new) - set(base)):
+            report.append(
+                f"  {section}/{key}: fresh={new[key]:.3f} (new metric, not gated)"
+            )
+    return regressions, report
+
+
+def _fresh_run(out_path: str) -> dict:
+    """Re-measure the gated modules in-process (paired: every ratio's
+    numerator and denominator come from THIS machine, THIS run)."""
+    from benchmarks import common, run as runner
+
+    common.reset_results()
+    for mod_name in ("fig5_speedup", "batch_throughput"):
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        print(f"# perf_gate: running {mod_name}", file=sys.stderr)
+        mod.run()
+    fresh = {
+        "speedups": {
+            "vs_serial_cpu": runner._serial_speedups(common.RESULTS),
+            "vs_serial_cpu_by_path": runner._serial_speedups_by_path(
+                common.RESULTS
+            ),
+            "batch_vs_b1": runner._batch_speedups(common.RESULTS),
+        },
+        "rows": common.RESULTS,
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(fresh, f, indent=1)
+            f.write("\n")
+        print(f"# perf_gate: wrote fresh results to {out_path}", file=sys.stderr)
+    return fresh
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_glcm.json",
+                    help="committed results to ratchet against")
+    ap.add_argument("--out", default="BENCH_fresh.json",
+                    help="fresh results artifact path ('' disables)")
+    ap.add_argument("--noise", type=float, default=0.35,
+                    help="tolerated fractional undershoot (default 0.35)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.baseline) as f:
+            committed = json.load(f)
+    except (OSError, ValueError) as exc:
+        print(f"perf_gate: cannot read baseline {args.baseline}: {exc}")
+        return 2
+
+    fresh = _fresh_run(args.out)
+    regressions, report = gate(committed, fresh, args.noise)
+
+    print("perf_gate report (ratio metrics, fresh vs committed):")
+    for line in report:
+        print(line)
+    if regressions:
+        print(f"perf_gate: FAIL — {len(regressions)} regression(s):")
+        for r in regressions:
+            print(f"  {r}")
+        return 1
+    print("perf_gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

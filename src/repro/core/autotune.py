@@ -1,0 +1,345 @@
+"""Persisted autotuner: make ``scheme="auto"`` mean *tuned*, not *default*.
+
+The paper tunes its execution strategy by hand (R copies, block counts,
+Table II/III's parameter sweeps); the related CUDA-acceleration literature
+finds the same lesson — block/partition shapes must be tuned per device and
+problem size.  This module automates that: :func:`autotune` measures every
+eligible backend of the registry over a small knob grid for one concrete
+``(spec, shape)`` workload, records the winner, and ``compile_plan``
+consults the store whenever it resolves ``scheme="auto"``.
+
+Search space (per backend): ``copies`` (the paper's R) for the one-hot
+scheme, ``num_blocks`` for the blocked scheme, and the Pallas kernels'
+slab/block shapes (``chunk``, ``tile_h``, ``slab_d``) — all spec fields, so
+a winner is just a partial spec update.
+
+Persistence is two-layer, mirroring the plan cache's role: a process-local
+dict (consulted on every ``compile_plan``; no I/O on the hot path) loaded
+once from a JSON sidecar on disk (``store_path()``; override with
+``REPRO_AUTOTUNE_PATH``), written back after each :func:`autotune` run.
+Winners therefore survive across processes; a fresh process re-reads the
+sidecar and serves tuned plans without re-measuring.  The tuned choice is
+part of ``compile_plan``'s cache key, so consuming a winner never retraces
+an already-cached plan, and a *new* winner (re-tune) transparently misses
+to a fresh compile instead of serving the stale program.
+
+Keys identify the WORKLOAD, not the knobs: the spec is canonicalized with
+all tunable fields reset, plus the input shape, the running jax backend,
+and any capability requirements.  Entries are validated at lookup time
+(backend still registered, capabilities still satisfied, device class
+matches) and ignored — never trusted — when stale.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import pathlib
+import statistics
+import tempfile
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backends as _backends
+from repro.core.spec import GLCMSpec
+
+__all__ = [
+    "TunedChoice",
+    "autotune",
+    "autotune_clear",
+    "lookup",
+    "store_path",
+    "tune_key",
+]
+
+# Spec fields the tuner may set — reset to defaults in the workload key.
+KNOB_DEFAULTS = {
+    "scheme": "auto",
+    "copies": 1,
+    "num_blocks": 4,
+    "accum": "auto",
+    "tile_h": None,
+    "chunk": None,
+    "slab_d": None,
+}
+
+_LOCK = threading.Lock()
+# path-str → {key: entry}; per-path so tests with REPRO_AUTOTUNE_PATH
+# overrides never bleed into the user's real sidecar.
+_MEM: dict[str, dict] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedChoice:
+    """A tuning winner: the backend to run and the spec knobs to apply.
+
+    Hashable (knobs are a sorted tuple of pairs) — ``compile_plan`` folds
+    the whole choice into its cache key.
+    """
+
+    backend: str
+    knobs: tuple[tuple[str, object], ...] = ()
+
+    def apply(self, spec: GLCMSpec) -> GLCMSpec:
+        return spec.replace(scheme=self.backend, **dict(self.knobs))
+
+
+def store_path() -> pathlib.Path:
+    """The JSON sidecar's location (``REPRO_AUTOTUNE_PATH`` overrides)."""
+    env = os.environ.get("REPRO_AUTOTUNE_PATH")
+    if env:
+        return pathlib.Path(env)
+    cache = os.environ.get("XDG_CACHE_HOME", os.path.expanduser("~/.cache"))
+    return pathlib.Path(cache) / "repro-glcm" / "autotune.json"
+
+
+def _store() -> dict:
+    """The in-memory winner table for the active sidecar (lazy-loaded)."""
+    path = store_path()
+    key = str(path)
+    with _LOCK:
+        table = _MEM.get(key)
+        if table is None:
+            table = {}
+            try:
+                with open(path) as fh:
+                    loaded = json.load(fh)
+                if isinstance(loaded, dict):
+                    table = loaded
+            except (OSError, ValueError):
+                pass  # missing or corrupt sidecar → start empty
+            _MEM[key] = table
+        return table
+
+
+def _save(table: dict) -> None:
+    path = store_path()
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+        with os.fdopen(fd, "w") as fh:
+            json.dump(table, fh, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # read-only host: winners stay process-local
+
+
+def autotune_clear(*, disk: bool = False) -> None:
+    """Forget tuning winners (the active sidecar's in-memory table; with
+    ``disk=True`` also delete the sidecar file)."""
+    with _LOCK:
+        _MEM.pop(str(store_path()), None)
+    if disk:
+        try:
+            os.unlink(store_path())
+        except OSError:
+            pass
+
+
+def tune_key(
+    spec: GLCMSpec, shape: tuple[int, ...], require: tuple[str, ...] = ()
+) -> str:
+    """Canonical workload identity: the spec with every tunable knob reset,
+    plus shape, device class and capability requirements."""
+    base = spec.replace(**KNOB_DEFAULTS)
+    ident = {
+        "device": jax.default_backend(),
+        "spec": repr(base),
+        "shape": list(int(s) for s in shape),
+        "require": sorted(require),
+    }
+    return json.dumps(ident, sort_keys=True)
+
+
+def _eligible(backend: _backends.Backend, spec: GLCMSpec, require) -> bool:
+    if not _backends.supports_ndim(backend, spec.ndim):
+        return False
+    if backend.caps.tpu_only and jax.default_backend() != "tpu":
+        return False  # interpret mode: not a production candidate
+    return all(getattr(backend.caps, cap, False) for cap in require)
+
+
+def lookup(
+    spec: GLCMSpec,
+    shape: tuple[int, ...],
+    *,
+    require: tuple[str, ...] = (),
+) -> TunedChoice | None:
+    """The persisted winner for this workload, or None.
+
+    Entries are re-validated against the live registry and device — a
+    winner recorded for a backend that is gone, incapable, or
+    device-mismatched is ignored, never trusted.
+    """
+    entry = _store().get(tune_key(spec, tuple(shape), tuple(require)))
+    if not isinstance(entry, dict) or "backend" not in entry:
+        return None
+    try:
+        backend = _backends.get_backend(entry["backend"])
+    except ValueError:
+        return None
+    if not _eligible(backend, spec, require):
+        return None
+    knobs = entry.get("knobs") or {}
+    if not isinstance(knobs, dict) or not set(knobs) <= set(KNOB_DEFAULTS):
+        return None
+    return TunedChoice(
+        backend=entry["backend"], knobs=tuple(sorted(knobs.items()))
+    )
+
+
+def _candidates(
+    spec: GLCMSpec, shape: tuple[int, ...], name: str
+) -> list[dict]:
+    """The knob grid per backend — small on purpose: the expensive axis is
+    backend choice; knobs refine the winner."""
+    if name == "onehot":
+        return [{"copies": c} for c in (1, 2, 4)]
+    if name == "blocked":
+        n0 = shape[-spec.ndim] if spec.region == "global" else spec.region_shape[0]
+        halo = max(off[0] for off in spec.offsets())
+        out = [
+            {"num_blocks": nb}
+            for nb in (2, 4, 8)
+            if n0 % nb == 0 and halo <= n0 // nb
+        ]
+        return out or [{}]
+    if name == "pallas":
+        return [
+            {"chunk": c, "copies": r}
+            for c in (1024, 2048, 4096)
+            for r in (1, 4)
+        ]
+    if name == "pallas_fused":
+        return [{"tile_h": t} for t in (8, 16, 32)]
+    if name == "pallas_volume":
+        return [{"slab_d": s} for s in (8, 16)]
+    return [{}]
+
+
+def _sample_input(spec: GLCMSpec, shape: tuple[int, ...]) -> jax.Array:
+    rng = np.random.default_rng(0)
+    if spec.quantize is not None:
+        return jnp.asarray(rng.random(shape, dtype=np.float32) * 255.0)
+    return jnp.asarray(rng.integers(0, spec.levels, shape, dtype=np.int32))
+
+
+def _time_plan(plan, x, trials: int) -> float:
+    """Median wall time of ``plan(x)`` in µs (after compile + warmup)."""
+    def call():
+        jax.block_until_ready(plan(x))
+
+    call()
+    call()
+    times = []
+    for _ in range(max(trials, 1)):
+        t0 = time.perf_counter()
+        call()
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times) * 1e6
+
+
+def autotune(
+    spec: GLCMSpec,
+    shape: tuple[int, ...],
+    *,
+    features: bool | tuple[str, ...] = False,
+    require: tuple[str, ...] = (),
+    trials: int = 3,
+    persist: bool = True,
+    verbose: bool = False,
+) -> TunedChoice:
+    """Measure every eligible (backend, knobs) candidate for this workload,
+    record the winner (in-memory always; JSON sidecar when ``persist``),
+    and return it.  Subsequent ``compile_plan(spec_with_auto, shape)`` calls
+    resolve to the winner — in this process and, via the sidecar, in every
+    later one.
+    """
+    from repro.core import plan as _plan  # late: plan ↔ autotune
+
+    shape = tuple(int(s) for s in shape)
+    require = tuple(require)
+    x = _sample_input(spec, shape)
+    measured: list[tuple[float, str, dict]] = []
+    for name in _backends.available_backends():
+        backend = _backends.get_backend(name)
+        if not _eligible(backend, spec, require):
+            continue
+        for knobs in _candidates(spec, shape, name):
+            try:
+                cand = spec.replace(scheme=name, **knobs)
+                p = _plan.compile_plan(
+                    cand, shape, features=features, require=require
+                )
+                us = _time_plan(p, x, trials)
+            except Exception as exc:  # invalid knob/shape combo: not a winner
+                if verbose:
+                    print(f"  {name} {knobs}: skipped ({exc})")
+                continue
+            if verbose:
+                print(f"  {name} {knobs}: {us:.0f} us")
+            measured.append((us, name, knobs))
+    if not measured:
+        raise RuntimeError(
+            f"no eligible backend could serve spec {spec} at shape {shape}"
+        )
+    us, name, knobs = min(measured, key=lambda t: t[0])
+    key = tune_key(spec, shape, require)
+    table = _store()
+    with _LOCK:
+        table[key] = {"backend": name, "knobs": knobs, "us": round(us, 1)}
+        snapshot = dict(table)
+    if persist:
+        _save(snapshot)
+    return TunedChoice(backend=name, knobs=tuple(sorted(knobs.items())))
+
+
+def _parse_pairs(text: str) -> tuple[tuple[int, int], ...]:
+    out = []
+    for part in text.split(","):
+        d, t = part.split(":")
+        out.append((int(d), int(t)))
+    return tuple(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Tune GLCM execution for one workload and persist the winner."
+    )
+    ap.add_argument("--size", default="512x512", help="spatial shape, e.g. 512x512")
+    ap.add_argument("--batch", type=int, default=0, help="batch size (0 = unbatched)")
+    ap.add_argument("--levels", type=int, default=32)
+    ap.add_argument("--pairs", default="1:0", help="d:theta list, e.g. 1:0,1:45")
+    ap.add_argument("--quantize", default=None, choices=[None, "uniform", "equalized"])
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--no-persist", action="store_true")
+    args = ap.parse_args(argv)
+
+    spatial = tuple(int(s) for s in args.size.split("x"))
+    shape = ((args.batch,) if args.batch else ()) + spatial
+    spec = GLCMSpec(
+        levels=args.levels,
+        pairs=_parse_pairs(args.pairs),
+        quantize=args.quantize,
+        ndim=len(spatial),
+    )
+    choice = autotune(
+        spec, shape, trials=args.trials, persist=not args.no_persist,
+        verbose=True,
+    )
+    entry = _store()[tune_key(spec, shape)]
+    print(
+        f"winner: {choice.backend} {dict(choice.knobs)} "
+        f"({entry['us']:.0f} us) -> {store_path()}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

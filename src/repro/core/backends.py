@@ -2,14 +2,19 @@
 
 Each backend implements
 
-    compute(img_batch, spec) -> (B, n_pairs, L, L) float32 counts
+    compute(img_batch, spec, quant=None) -> (B, n_pairs, L, L) counts
 
 where ``img_batch`` is an already-quantized int32 stack — (B, H, W) for
 ``spec.ndim == 2``, (B, D, H, W) for volumetric ``ndim == 3`` specs — and
 ``spec`` is a resolved :class:`repro.core.spec.GLCMSpec` (no "auto").
-Quantization, symmetric/normalize post-processing and un/batching are the
-*plan's* job (``core.plan.compile_plan``) — backends only count votes, so a
-new strategy is one ``register()`` call, not three ``if/elif`` edits.
+With ``quant=(lo, span)`` (scalars, or per-image (B,) arrays) the stack is
+instead RAW pixels the backend bins on the fly (``caps.fused_quantize``
+declares support; the plan only passes ``quant`` to capable backends) — no
+quantized full-size intermediate is ever materialized.  Counts may be any
+exact dtype (integer or float32); the plan widens to float32.
+Range derivation, symmetric/normalize post-processing and un/batching are
+the *plan's* job (``core.plan.compile_plan``) — backends only count votes,
+so a new strategy is one ``register()`` call, not three ``if/elif`` edits.
 
 Capabilities declare what each strategy can do (multi-offset fusion in a
 single device pass, batch carried as a kernel grid axis, TPU-targeted
@@ -35,7 +40,7 @@ from repro.core.schemes import (
     extract_regions,
     glcm_blocked,
     glcm_multi,
-    glcm_scatter,
+    glcm_scatter_batch,
     glcm_windowed,
 )
 from repro.core.spec import GLCMSpec
@@ -66,6 +71,12 @@ class Capabilities:
     volumetric: bool = False          # serves ndim=3 (D, H, W) volume specs
     volume_only: bool = False         # serves ONLY ndim=3 specs (implies
     #                                   volumetric; enforced at register())
+    fused_quantize: bool = False      # accepts raw pixels + quant=(lo, span)
+    #                                   and bins on the fly (no quantized
+    #                                   full-size intermediate)
+    host_native: bool = False         # also exposes host_fn: a plain-NumPy
+    #                                   counting path the plan calls OUTSIDE
+    #                                   jit (single-core CPU fast path)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,18 +90,23 @@ class Backend:
     leading-axis shard with -1 sentinels dropped — ``offset`` is the
     per-axis (dy, dx) / (dz, dy, dx) tuple and ``local_n`` the shard's
     un-extended leading extent; this is the per-shard hook the distributed
-    layer consumes.  ``region_compute(img_batch, spec)`` (optional, for
-    ``caps.region_grid``) serves non-global specs natively, returning
-    (B, *grid, n_pairs, L, L); backends without it are served by the
-    generic patch-extraction fallback in :func:`compute_regions`.
+    layer consumes.  ``region_compute(img_batch, spec, quant=None)``
+    (optional, for ``caps.region_grid``) serves non-global specs natively,
+    returning (B, *grid, n_pairs, L, L); backends without it are served by
+    the generic patch-extraction fallback in :func:`compute_regions`.
+    ``host_fn(stack_np, spec, quant)`` (optional, for ``caps.host_native``)
+    is a plain-NumPy counting path — (B, *spatial) ndarray in, integer
+    count ndarray out, regions included — that the plan invokes outside
+    jit when the input is concrete.
     """
 
     name: str
-    compute: Callable[[jax.Array, GLCMSpec], jax.Array]
+    compute: Callable[..., jax.Array]
     caps: Capabilities = Capabilities()
     validate: Callable[[GLCMSpec, tuple[int, ...]], None] | None = None
     local_partial: Callable[..., jax.Array] | None = None
-    region_compute: Callable[[jax.Array, GLCMSpec], jax.Array] | None = None
+    region_compute: Callable[..., jax.Array] | None = None
+    host_fn: Callable[..., object] | None = None
 
 
 def supports_ndim(backend: Backend, ndim: int) -> bool:
@@ -101,7 +117,7 @@ def supports_ndim(backend: Backend, ndim: int) -> bool:
 
 
 def compute_regions(
-    backend: Backend, img_batch: jax.Array, spec: GLCMSpec
+    backend: Backend, img_batch: jax.Array, spec: GLCMSpec, quant=None
 ) -> jax.Array:
     """Region-aware dispatch: (B, *spatial) → (B, *grid, n_pairs, L, L).
 
@@ -111,17 +127,29 @@ def compute_regions(
     grid ONCE and feeds it through ``backend.compute`` as a flat
     (B·prod(grid), *region_shape) batch — every registered strategy serves
     tiled/windowed workloads (2-D and 3-D alike) unchanged.
+
+    ``quant=(lo, span)`` (fused quantization; only for backends declaring
+    ``caps.fused_quantize``) is forwarded as-is; per-image (B,) ranges are
+    repeated across each image's windows for the patch fallback, so every
+    window bins with its image's range.
     """
     if spec.region == "global":
-        return backend.compute(img_batch, spec)
+        return backend.compute(img_batch, spec, quant=quant)
     if backend.caps.region_grid:
         # register() guarantees region_compute is present iff the cap is set.
-        return backend.region_compute(img_batch, spec)
+        return backend.region_compute(img_batch, spec, quant=quant)
     patches = extract_regions(img_batch, spec.region_shape, spec.strides)
     nd = spec.ndim
     b = patches.shape[0]
     grid = patches.shape[1 : 1 + nd]
-    mats = backend.compute(patches.reshape((-1,) + patches.shape[1 + nd :]), spec)
+    flat = patches.reshape((-1,) + patches.shape[1 + nd :])
+    if quant is not None:
+        lo = jnp.asarray(quant[0], jnp.float32)
+        span = jnp.asarray(quant[1], jnp.float32)
+        if lo.ndim:
+            reps = flat.shape[0] // lo.shape[0]
+            quant = (jnp.repeat(lo, reps), jnp.repeat(span, reps))
+    mats = backend.compute(flat, spec, quant=quant)
     return mats.reshape((b,) + grid + mats.shape[1:])
 
 
@@ -143,6 +171,11 @@ def register(backend: Backend) -> Backend:
         raise ValueError(
             f"backend {backend.name!r}: caps.volume_only requires "
             "caps.volumetric"
+        )
+    if backend.caps.host_native != (backend.host_fn is not None):
+        raise ValueError(
+            f"backend {backend.name!r}: caps.host_native must match the "
+            "presence of host_fn"
         )
     _REGISTRY[backend.name] = backend
     return backend
@@ -196,23 +229,31 @@ def resolve_scheme(spec: GLCMSpec, *, require: tuple[str, ...] = ()) -> str:
 
 
 # ---------------------------------------------------------------------------
-# The six built-in strategies
+# The seven built-in strategies
 # ---------------------------------------------------------------------------
 
 
-def _scatter_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
-    # One traced program: the per-offset scatters fuse under the plan's jit.
-    return jnp.stack(
-        [glcm_scatter(img, spec.levels, offset=off) for off in spec.offsets()],
-        axis=-3,
-    )
+def _vote_dtype(spec: GLCMSpec):
+    """spec.accum → one-hot vote dtype request (None = per-device auto)."""
+    if spec.accum == "auto":
+        return None
+    return jnp.int8 if spec.accum == "int" else jnp.float32
 
 
-def _onehot_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
+def _scatter_compute(img: jax.Array, spec: GLCMSpec, quant=None) -> jax.Array:
+    # One flat integer scatter per offset over the whole stack — batched
+    # scatters under vmap repeat their per-image update-loop overhead B
+    # times (the committed batch_vs_b1 regression); linearizing the batch
+    # into the scatter index removes that.
+    return glcm_scatter_batch(img, spec.levels, spec.offsets(), quant=quant)
+
+
+def _onehot_compute(img: jax.Array, spec: GLCMSpec, quant=None) -> jax.Array:
     # glcm_multi amortizes the image read across offsets and batches the
     # L×L matmuls — one program per request regardless of len(pairs).
     return glcm_multi(
-        img, spec.levels, offsets=spec.offsets(), copies=spec.copies
+        img, spec.levels, offsets=spec.offsets(), copies=spec.copies,
+        dtype=_vote_dtype(spec), quant=quant,
     )
 
 
@@ -222,20 +263,24 @@ def _onehot_local_partial(ext, levels, offset, local_n):
     return local_partial_nd(ext, levels, offset, local_n)
 
 
-def _onehot_region_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
+def _onehot_region_compute(img: jax.Array, spec: GLCMSpec, quant=None) -> jax.Array:
     # Native fused windowed path: one extraction + batched voting matmuls
     # with the window grid as the dot_general batch axis (any rank).
     return glcm_windowed(
         img, spec.levels, spec.pairs, spec.region_shape, spec.strides,
         offsets=spec.offsets(), copies=spec.copies,
+        dtype=_vote_dtype(spec), quant=quant,
     )
 
 
-def _blocked_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
+def _blocked_compute(img: jax.Array, spec: GLCMSpec, quant=None) -> jax.Array:
+    if quant is not None:  # caps.fused_quantize is False; the plan never does this
+        raise ValueError("blocked backend does not support fused quantization")
     return jnp.stack(
         [
             glcm_blocked(
-                img, spec.levels, offset=off, num_blocks=spec.num_blocks
+                img, spec.levels, offset=off, num_blocks=spec.num_blocks,
+                dtype=_vote_dtype(spec),
             )
             for off in spec.offsets()
         ],
@@ -259,32 +304,42 @@ def _blocked_validate(spec: GLCMSpec, shape: tuple[int, ...]) -> None:
             )
 
 
-def _pallas_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
+def _pallas_compute(img: jax.Array, spec: GLCMSpec, quant=None) -> jax.Array:
+    chunk = spec.chunk if spec.chunk is not None else kops.DEFAULT_CHUNK
     return jnp.stack(
         [
-            kops.glcm_pallas(img, spec.levels, offset=off).astype(jnp.float32)
+            kops.glcm_pallas(
+                img, spec.levels, offset=off, chunk=chunk,
+                copies=max(spec.copies, 1), quant=quant,
+            ).astype(jnp.float32)
             for off in spec.offsets()
         ],
         axis=-3,
     )
 
 
-def _pallas_fused_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
-    return kops.glcm_pallas_multi(img, spec.levels, spec.pairs).astype(jnp.float32)
-
-
-def _pallas_fused_region_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
-    # Windowed Pallas variant: extraction in XLA, voting in one kernel launch
-    # with the (B, gh, gw) window grid as the kernel grid axes.
-    patches = extract_regions(img, spec.region_shape, spec.strides)
-    return kops.glcm_pallas_windowed(
-        patches, spec.levels, spec.pairs
+def _pallas_fused_compute(img: jax.Array, spec: GLCMSpec, quant=None) -> jax.Array:
+    return kops.glcm_pallas_multi(
+        img, spec.levels, spec.pairs, tile_h=spec.tile_h, copies=spec.copies,
+        quant=quant,
     ).astype(jnp.float32)
 
 
-def _pallas_volume_compute(img: jax.Array, spec: GLCMSpec) -> jax.Array:
+def _pallas_fused_region_compute(img: jax.Array, spec: GLCMSpec, quant=None) -> jax.Array:
+    # Windowed Pallas variant: extraction in XLA, voting in one kernel launch
+    # with the (B, gh, gw) window grid as the kernel grid axes. With fused
+    # quantization the extracted patches stay RAW; the kernel bins each
+    # window with its image's (lo, span) in-register.
+    patches = extract_regions(img, spec.region_shape, spec.strides)
+    return kops.glcm_pallas_windowed(
+        patches, spec.levels, spec.pairs, copies=spec.copies, quant=quant,
+    ).astype(jnp.float32)
+
+
+def _pallas_volume_compute(img: jax.Array, spec: GLCMSpec, quant=None) -> jax.Array:
     return kops.glcm_pallas_volume(
-        img, spec.levels, spec.pairs, copies=spec.copies
+        img, spec.levels, spec.pairs, slab_d=spec.slab_d, copies=spec.copies,
+        quant=quant,
     ).astype(jnp.float32)
 
 
@@ -296,12 +351,42 @@ def _pallas_volume_validate(spec: GLCMSpec, shape: tuple[int, ...]) -> None:
         )
 
 
+def _native_compute(img: jax.Array, spec: GLCMSpec, quant=None) -> jax.Array:
+    # Registry-correct jax-context fallback for the host-native backend: a
+    # pure_callback into the NumPy counting core, so scheme="native" still
+    # works inside a traced program (outer jit/vmap). The plan's fast path
+    # never goes through here — it calls host_fn directly, outside jit.
+    from repro.core import native as _native
+
+    out = jax.ShapeDtypeStruct(
+        (img.shape[0], spec.n_pairs, spec.levels, spec.levels), jnp.float32
+    )
+
+    def cb(x, *qargs):
+        import numpy as np
+
+        q = (np.asarray(qargs[0]), np.asarray(qargs[1])) if qargs else None
+        qs = _native.quantize_stack(np.asarray(x), spec, q)
+        return _native.counts_pairs(qs, spec.levels, spec.offsets()).astype(
+            "float32"
+        )
+
+    args = (img,) if quant is None else (img, quant[0], quant[1])
+    return jax.pure_callback(cb, out, *args)
+
+
+def _native_host_fn(stack, spec: GLCMSpec, quant=None):
+    from repro.core import native as _native
+
+    return _native.native_counts(stack, spec, quant)
+
+
 register(
     Backend(
         name="scatter",
         compute=_scatter_compute,
         # the contention baseline: no fast-path claims — but rank-general
-        caps=Capabilities(volumetric=True),
+        caps=Capabilities(volumetric=True, fused_quantize=True),
     )
 )
 register(
@@ -310,7 +395,7 @@ register(
         compute=_onehot_compute,
         caps=Capabilities(
             multi_offset_fused=True, sharded_partial=True, region_grid=True,
-            volumetric=True,
+            volumetric=True, fused_quantize=True,
         ),
         local_partial=_onehot_local_partial,
         region_compute=_onehot_region_compute,
@@ -326,9 +411,23 @@ register(
 )
 register(
     Backend(
+        name="native",
+        compute=_native_compute,
+        caps=Capabilities(
+            multi_offset_fused=True, volumetric=True, fused_quantize=True,
+            host_native=True,
+        ),
+        host_fn=_native_host_fn,
+    )
+)
+register(
+    Backend(
         name="pallas",
         compute=_pallas_compute,
-        caps=Capabilities(batch_grid=True, tpu_only=True, volumetric=True),
+        caps=Capabilities(
+            batch_grid=True, tpu_only=True, volumetric=True,
+            fused_quantize=True,
+        ),
     )
 )
 register(
@@ -337,7 +436,7 @@ register(
         compute=_pallas_fused_compute,
         caps=Capabilities(
             multi_offset_fused=True, batch_grid=True, tpu_only=True,
-            region_grid=True,
+            region_grid=True, fused_quantize=True,
         ),
         region_compute=_pallas_fused_region_compute,
     )
@@ -348,7 +447,7 @@ register(
         compute=_pallas_volume_compute,
         caps=Capabilities(
             multi_offset_fused=True, batch_grid=True, tpu_only=True,
-            volumetric=True, volume_only=True,
+            volumetric=True, volume_only=True, fused_quantize=True,
         ),
         validate=_pallas_volume_validate,
     )

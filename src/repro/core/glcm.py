@@ -8,9 +8,12 @@ Schemes (see DESIGN.md §2 for the CUDA→TPU mapping):
   "scatter"       paper Scheme 1 (contended scatter — conflict baseline)
   "onehot"        paper Scheme 2 (conflict-free one-hot MXU voting), jnp
   "blocked"       paper Scheme 3 single-device (halo'd row blocks, scanned)
+  "native"        host NumPy bincount counting (single-core CPU fast path)
   "pallas"        pair-stream Pallas voting kernel (production path)
   "pallas_fused"  fused tiled Pallas kernel (multi-offset, one image pass)
-  "auto"          resolved by the registry: Pallas on TPU, "onehot" elsewhere
+  "auto"          resolved by the registry: a persisted autotuner winner when
+                  one exists for this (spec, shape) — see ``core.autotune`` —
+                  else Pallas on TPU, "onehot" elsewhere
 
 Both entry points build a frozen :class:`repro.core.spec.GLCMSpec` and
 execute it through :func:`repro.core.plan.compile_plan` — one jitted program
@@ -94,8 +97,8 @@ __all__ = [
 ]
 
 Scheme = Literal[
-    "scatter", "onehot", "blocked", "pallas", "pallas_fused", "pallas_volume",
-    "auto",
+    "scatter", "onehot", "blocked", "native", "pallas", "pallas_fused",
+    "pallas_volume", "auto",
 ]
 
 
@@ -127,6 +130,7 @@ def glcm(
     region_shape: tuple[int, ...] | int | None = None,
     region_stride: tuple[int, ...] | int | None = None,
     ndim: int = 2,
+    accum: str = "auto",
 ) -> jax.Array:
     """Gray-level co-occurrence matrix of image(s) or volume(s), float32.
 
@@ -136,6 +140,9 @@ def glcm(
     one GLCM per tile/window. With ``ndim=3`` the input is a (D, H, W)
     volume (or (B, D, H, W) stack) and ``theta`` names one of the 13 unique
     3-D directions (0..12; 0..3 are the in-plane thetas' order).
+    ``accum`` selects the vote-accumulator policy ("auto"/"int"/"float32"
+    — see ``GLCMSpec.accum``); all three are bit-identical where integer
+    voting is exact.
     """
     _check_ndim(image, ndim)
     spec = GLCMSpec(
@@ -151,6 +158,7 @@ def glcm(
         region_shape=region_shape,
         region_stride=region_stride,
         ndim=ndim,
+        accum=accum,
     )
     return compile_plan(spec, image.shape)(image)[..., 0, :, :]
 
@@ -167,6 +175,7 @@ def glcm_features(
     region_stride: tuple[int, ...] | int | None = None,
     select: tuple[str, ...] | None = None,
     ndim: int = 2,
+    accum: str = "auto",
 ) -> jax.Array:
     """Image(s)/volume(s) → Haralick features over ``pairs`` offsets
     (normalized GLCMs).
@@ -185,7 +194,7 @@ def glcm_features(
     spec = GLCMSpec(
         levels=levels, pairs=tuple(pairs), scheme=scheme, quantize=quantize,
         region=region, region_shape=region_shape, region_stride=region_stride,
-        ndim=ndim,
+        ndim=ndim, accum=accum,
     )
     features = True if select is None else tuple(select)
     return compile_plan(spec, image.shape, features=features)(image)

@@ -6,17 +6,42 @@ This is the single execution layer every GLCM entry point goes through:
     plan  = compile_plan(spec, imgs.shape)          # resolved, jitted, cached
     mats  = plan(imgs)                              # (B, n_pairs, L, L)
 
-``compile_plan`` resolves "auto" against the backend registry, runs the
-backend's capability validation for the concrete shape, builds the full
-program (per-image quantize → backend vote counting → symmetric/normalize →
-optionally Haralick features), jits it ONCE, and caches the resulting
-:class:`GLCMPlan` keyed by ``(spec, shape, features, require)``.  A repeated
+``compile_plan`` resolves "auto" against the backend registry — consulting
+the :mod:`core.autotune` winner store first, so "auto" means *tuned* when a
+winner for this workload has been measured (in this or any earlier process;
+the store persists to a JSON sidecar) — runs the backend's capability
+validation for the concrete shape, builds the full program (quantize →
+backend vote counting → symmetric/normalize → optionally Haralick
+features), jits it ONCE, and caches the resulting :class:`GLCMPlan` keyed
+by ``(spec, shape, features, require, tuned-choice)``.  A repeated
 ``(spec, shape)`` therefore returns the *same* compiled callable — no
-retrace, no recompile — which is what lets one program shape serve all
-traffic in ``serve.GLCMEngine`` and the streaming pipeline.  The cache is a
+retrace, no recompile (the tuned choice is in the key, so consuming a
+persisted winner hits the cache, while a NEWLY-recorded winner misses to a
+fresh compile instead of serving the stale program).  The cache is a
 bounded LRU (``plan_cache_limit``, default 128 plans) so a long-lived server
 that sees many shapes cannot leak compiled programs; evictions show up in
 ``plan_cache_stats()``.
+
+Quantization placement: for ``quantize="uniform"`` specs on backends that
+declare ``caps.fused_quantize`` (all voting backends except ``blocked``),
+the plan does NOT pre-quantize.  It derives each image's (lo, span) range
+parameters (static floats when ``spec.vrange`` pins the range; per-image
+(B,) reductions otherwise) and hands the RAW stack plus ``quant=(lo,
+span)`` to the backend, which bins values where it consumes them — sliced
+pair planes in the schemes, in-register tiles in the Pallas kernels.  No
+quantized (B, H, W) intermediate exists in the traced program (asserted by
+jaxpr inspection in ``tests/test_fusion.py``).  "equalized" quantization
+(a global-histogram transform) and non-capable backends keep the legacy
+pre-quantize stage.
+
+Host-native execution: a backend declaring ``caps.host_native`` (the
+``native`` NumPy-bincount backend) is dispatched OUTSIDE jit — its
+counting core is plain NumPy, and wrapping it in ``pure_callback`` would
+add ~1.6 ms of marshalling per call.  The plan calls ``backend.host_fn``
+on the concrete ndarray and applies the (jitted) symmetric/normalize/
+features tail to the small count output.  Inside a traced context (an
+outer jit/vmap over the plan), the same plan transparently falls back to
+the jittable ``pure_callback`` path, so composition still works.
 
 Region-structured workloads (``spec.region`` of "tiles"/"window") generalize
 the contract: counts become (B, gh, gw, n_pairs, L, L) and features
@@ -53,10 +78,15 @@ from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import backends as _backends
 from repro.core.haralick import FEATURE_NAMES, haralick_features
-from repro.core.quantize import quantize_equalized, quantize_uniform
+from repro.core.quantize import (
+    quantize_equalized,
+    quantize_uniform,
+    uniform_params,
+)
 from repro.core.spec import GLCMSpec
 
 __all__ = [
@@ -87,6 +117,9 @@ class GLCMPlan:
     features: bool | tuple[str, ...]
     fn: Callable[[jax.Array], jax.Array]
     grid: tuple[int, ...] = ()
+    fused_quantize: bool = False   # quantization is binned inside the count
+    host_native: bool = False      # fn runs NumPy counting outside jit
+    tuned: object = None           # the autotune.TunedChoice applied, if any
 
     def __call__(self, img: jax.Array) -> jax.Array:
         return self.fn(img)
@@ -191,7 +224,15 @@ def compile_plan(
         )
     require = tuple(require)
     features = _canonical_features(features)
-    key = (spec, shape, features, require)
+    tuned = None
+    if spec.scheme == "auto":
+        from repro.core import autotune as _autotune  # late: plan ↔ autotune
+
+        tuned = _autotune.lookup(spec, shape, require=require)
+    # The tuned choice is part of the key: a persisted winner hits the same
+    # cached plan every time, while a newly-recorded winner misses to a
+    # fresh compile instead of serving the stale program.
+    key = (spec, shape, features, require, tuned)
     with _LOCK:
         plan = _CACHE.get(key)
         if plan is not None:
@@ -199,7 +240,10 @@ def compile_plan(
             _STATS["hits"] += 1
             return plan
 
-    name = _backends.resolve_scheme(spec, require=require)
+    if tuned is not None:
+        name = tuned.backend
+    else:
+        name = _backends.resolve_scheme(spec, require=require)
     backend = _backends.get_backend(name)
     if not _backends.supports_ndim(backend, nd):
         raise ValueError(
@@ -213,7 +257,10 @@ def compile_plan(
             raise ValueError(
                 f"scheme {name!r} lacks required capability {cap!r}"
             )
-    resolved = spec if spec.scheme == name else spec.replace(scheme=name)
+    if tuned is not None:
+        resolved = tuned.apply(spec)
+    else:
+        resolved = spec if spec.scheme == name else spec.replace(scheme=name)
 
     spatial = shape[-nd:]
     # Region validation happens against the concrete input shape BEFORE any
@@ -248,30 +295,81 @@ def compile_plan(
     quant = _quantizer(resolved)
     batched = len(shape) == nd + 1
     select = None if isinstance(features, bool) else features
+    # Fused quantization: uniform binning folds into the count (the backend
+    # bins sliced planes / in-register tiles); "equalized" (a global-
+    # histogram transform) and non-capable backends pre-quantize as before.
+    fused = resolved.quantize == "uniform" and backend.caps.fused_quantize
+    vmin, vmax = resolved.vrange if resolved.vrange is not None else (None, None)
 
-    def run(img: jax.Array) -> jax.Array:
-        if quant is not None:
-            # Per-image quantization: each image of a batch uses its OWN
-            # value range (identical to quantizing one image at a time).
-            # Regions share their image's quantization — one gray-level
-            # mapping per texture map, never per window.
-            img = jax.vmap(quant)(img) if batched else quant(img)
-        img = img.astype(jnp.int32)
-        stack = img if batched else img[None]
-        mats = _backends.compute_regions(backend, stack, resolved).astype(
-            jnp.float32
-        )
+    def tail(mats: jax.Array) -> jax.Array:
         if resolved.symmetric:
             mats = mats + jnp.swapaxes(mats, -1, -2)
         if resolved.normalize:
             mats = mats / jnp.maximum(mats.sum(axis=(-2, -1), keepdims=True), 1.0)
         if features:
             mats = haralick_features(mats, select=select)
+        return mats
+
+    def run(img: jax.Array) -> jax.Array:
+        if fused:
+            # The backend sees RAW pixels plus per-image (lo, span); no
+            # quantized full-size intermediate exists in this program.
+            stack = img if batched else img[None]
+            qargs = uniform_params(stack, vmin=vmin, vmax=vmax, batched=True)
+        else:
+            if quant is not None:
+                # Per-image quantization: each image of a batch uses its OWN
+                # value range (identical to quantizing one image at a time).
+                # Regions share their image's quantization — one gray-level
+                # mapping per texture map, never per window.
+                img = jax.vmap(quant)(img) if batched else quant(img)
+            img = img.astype(jnp.int32)
+            stack = img if batched else img[None]
+            qargs = None
+        mats = _backends.compute_regions(
+            backend, stack, resolved, quant=qargs
+        ).astype(jnp.float32)
+        mats = tail(mats)
         return mats if batched else mats[0]
+
+    host = backend.caps.host_native
+    if host:
+        # NumPy counting outside jit; only the small symmetric/normalize/
+        # features tail is a jitted program.
+        from repro.core import native as _native
+
+        needs_tail = bool(resolved.symmetric or resolved.normalize or features)
+        tail_j = jax.jit(tail) if needs_tail else None
+        jit_run = jax.jit(run)  # traced-context fallback (pure_callback)
+
+        def run_host(img):
+            if isinstance(img, jax.core.Tracer):
+                return jit_run(img)
+            x = np.asarray(img)
+            if fused:
+                stack = x if batched else x[None]
+                qargs = _native.uniform_params_np(stack, vmin, vmax)
+            else:
+                if quant is not None:
+                    arr = jnp.asarray(x)
+                    arr = jax.vmap(quant)(arr) if batched else quant(arr)
+                    x = np.asarray(arr)
+                stack = x if batched else x[None]
+                qargs = None
+            counts = backend.host_fn(stack, resolved, qargs)
+            mats = jnp.asarray(np.asarray(counts, np.float32))
+            if tail_j is not None:
+                mats = tail_j(mats)
+            return mats if batched else mats[0]
+
+        fn = run_host
+    else:
+        fn = jax.jit(run)
 
     plan = GLCMPlan(
         spec=resolved, backend=backend, shape=shape, features=features,
-        fn=jax.jit(run), grid=grid,
+        fn=fn, grid=grid, fused_quantize=fused, host_native=host,
+        tuned=tuned,
     )
     with _LOCK:
         plan = _CACHE.setdefault(key, plan)

@@ -14,6 +14,23 @@ Two quantizers are provided:
   bin-occupancy distribution this produces.
 
 Both are pure jnp, jit-safe, and vectorize over leading batch dims.
+
+Fused execution
+---------------
+``bin_values`` is the single affine-binning expression shared by the
+standalone quantizer AND every fused-quantize execution path (the Pallas
+kernels bin tiles in-register; the one-hot/scatter schemes bin the sliced
+pair planes): keeping the op sequence identical everywhere is what makes
+the fused plans bit-exact with quantize-then-count.  ``uniform_params``
+computes the (lo, span) a fused consumer needs — static floats when the
+spec pins ``vrange``, per-image reductions otherwise (two scalars per
+image: the only thing a fused plan ever materializes about quantization).
+
+``quantize_uniform`` also short-circuits the provably-identity case (uint8
+input, ``levels=256``, full 0..255 vrange) to a bare dtype cast instead of
+the float affine round-trip — the affine is the identity there (verified
+bit-exactly in ``tests/test_quantize.py``), so the round-trip is pure
+wasted memory traffic.
 """
 
 from __future__ import annotations
@@ -21,7 +38,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["quantize_uniform", "quantize_equalized", "assert_levels"]
+__all__ = [
+    "quantize_uniform",
+    "quantize_equalized",
+    "assert_levels",
+    "bin_values",
+    "uniform_params",
+    "is_identity_quantize",
+]
 
 # Gray levels used throughout the paper.
 PAPER_LEVELS = (8, 32)
@@ -30,6 +54,73 @@ PAPER_LEVELS = (8, 32)
 def assert_levels(levels: int) -> None:
     if not (2 <= levels <= 256):
         raise ValueError(f"levels must be in [2, 256], got {levels}")
+
+
+def is_identity_quantize(
+    dtype, levels: int, vmin: float | None, vmax: float | None
+) -> bool:
+    """Whether uniform quantization is provably the identity map.
+
+    True iff the input dtype bounds the data to [0, 255] (uint8), the output
+    keeps all 256 levels, and the pinned range is exactly (0, 255): then
+    ``floor(v / 255 * 256)`` equals ``v`` for every v in [0, 255] (the
+    v = 255 case lands on 256 and is clipped back), so the affine round-trip
+    is a no-op and a dtype cast suffices.
+    """
+    return (
+        dtype == jnp.uint8
+        and levels == 256
+        and vmin is not None
+        and vmax is not None
+        and float(vmin) == 0.0
+        and float(vmax) == 255.0
+    )
+
+
+def bin_values(x: jax.Array, levels: int, lo, span) -> jax.Array:
+    """The uniform-binning expression: values → int32 levels in [0, levels).
+
+    ``lo``/``span`` are the range origin and width — python floats (static
+    range) or broadcastable arrays (per-image range).  This is the ONE
+    place the affine lives: ``quantize_uniform`` and every fused-quantize
+    consumer (kernels binning tiles in-register, schemes binning sliced
+    pair planes) call it, so fused and unfused plans are bit-exact.
+    """
+    x = x.astype(jnp.float32)
+    q = jnp.floor((x - lo) / span * levels)
+    return jnp.clip(q, 0, levels - 1).astype(jnp.int32)
+
+
+def uniform_params(
+    image: jax.Array,
+    *,
+    vmin: float | None = None,
+    vmax: float | None = None,
+    batched: bool = False,
+) -> tuple[jax.Array | float, jax.Array | float]:
+    """(lo, span) for ``bin_values`` — the fused-quantize parameters.
+
+    With a pinned ``vmin``/``vmax`` the result is static floats (no device
+    work at all).  Otherwise the range is derived from the data: scalars
+    for a single image, per-image (B,) reductions when ``batched`` (each
+    image of a stack uses its OWN range, identical to quantizing one image
+    at a time).  Reductions are the only device ops — a fused plan never
+    materializes anything image-sized for quantization.
+    """
+    if vmin is not None and vmax is not None:
+        return float(vmin), max(float(vmax) - float(vmin), _TINY)
+    x = image.astype(jnp.float32)
+    axes = tuple(range(1, x.ndim)) if batched else None
+    lo = x.min(axis=axes) if vmin is None else jnp.asarray(vmin, jnp.float32)
+    hi = x.max(axis=axes) if vmax is None else jnp.asarray(vmax, jnp.float32)
+    if batched:
+        lo = jnp.broadcast_to(lo, x.shape[:1])
+        hi = jnp.broadcast_to(hi, x.shape[:1])
+    span = jnp.maximum(hi - lo, _TINY)
+    return lo, span
+
+
+_TINY = float(jnp.finfo(jnp.float32).tiny)
 
 
 def quantize_uniform(
@@ -46,14 +137,16 @@ def quantize_uniform(
     the range must not depend on data, e.g. uint8 images → 0..255). When
     omitted, the data range is used (matches skimage's ``img_as_ubyte`` +
     rebin pipeline closely enough for texture work).
+
+    The provably-identity configuration (uint8 input, ``levels=256``,
+    ``vrange=(0, 255)``) short-circuits to a dtype cast — bit-exact with
+    the affine (every byte maps to itself) at none of its cost.
     """
     assert_levels(levels)
-    x = image.astype(jnp.float32)
-    lo = jnp.asarray(vmin, jnp.float32) if vmin is not None else x.min()
-    hi = jnp.asarray(vmax, jnp.float32) if vmax is not None else x.max()
-    span = jnp.maximum(hi - lo, jnp.finfo(jnp.float32).tiny)
-    q = jnp.floor((x - lo) / span * levels)
-    return jnp.clip(q, 0, levels - 1).astype(jnp.int32)
+    if is_identity_quantize(image.dtype, levels, vmin, vmax):
+        return image.astype(jnp.int32)
+    lo, span = uniform_params(image, vmin=vmin, vmax=vmax)
+    return bin_values(image, levels, lo, span)
 
 
 def quantize_equalized(image: jax.Array, levels: int, *, nbins: int = 256) -> jax.Array:

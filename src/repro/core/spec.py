@@ -27,11 +27,19 @@ import dataclasses
 
 from repro.kernels.ref import glcm_offsets, glcm_offsets_3d
 
-__all__ = ["GLCMSpec", "QUANTIZE_MODES", "REGION_MODES"]
+__all__ = ["GLCMSpec", "ACCUM_MODES", "QUANTIZE_MODES", "REGION_MODES"]
 
 # Valid ``quantize`` modes (``core.quantize``): None passes the image through
 # (already quantized), "uniform" rebins linearly, "equalized" equal-population.
 QUANTIZE_MODES = (None, "uniform", "equalized")
+
+# Valid ``accum`` (vote/accumulator dtype) modes.  "auto" picks per backend
+# and device (int8 one-hot votes with int32 matmul accumulation on TPU, where
+# the MXU natively widens; float32 votes on CPU, where XLA has no vectorized
+# int8 GEMM and integer dots measure ~1.6-2x SLOWER); "int" forces integer
+# voting (exact counts, uint16/int32 scatter cells widened before any
+# reduction); "float32" forces the legacy float path.
+ACCUM_MODES = ("auto", "int", "float32")
 
 # Valid ``region`` modes: "global" is one GLCM per whole image (the classic
 # workload), "tiles" one GLCM per cell of a non-overlapping partition (the
@@ -71,10 +79,11 @@ class GLCMSpec:
                 (d, θ) with θ ∈ {0, 45, 90, 135}; for ``ndim=3`` each is
                 (d, direction) with direction indexing the 13 unique 3-D
                 directions of ``kernels.ref.DIRECTIONS_3D``.
-    scheme      backend name ("scatter" | "onehot" | "blocked" | "pallas" |
-                "pallas_fused" | "pallas_volume") or "auto" (resolved at plan
-                time from the running jax backend and the registry's
-                capabilities).
+    scheme      backend name ("scatter" | "onehot" | "blocked" | "native" |
+                "pallas" | "pallas_fused" | "pallas_volume") or "auto"
+                (resolved at plan time from the running jax backend, the
+                registry's capabilities, and any persisted autotuner winner
+                for this (spec, shape) — see ``core.autotune``).
     quantize    pre-quantization mode (see QUANTIZE_MODES), applied per image.
     symmetric   add the transpose (P + Pᵀ) after counting.
     normalize   divide each matrix by its sum (probabilities, not counts).
@@ -100,6 +109,17 @@ class GLCMSpec:
                 strides by its own shape, by definition).
     ndim        spatial rank of the input: 2 for (H, W) images (the default,
                 bit-exact legacy behavior), 3 for (D, H, W) volumes.
+    accum       vote/accumulator dtype policy (see ACCUM_MODES). "auto" picks
+                per backend and device; integer voting is always exact (counts
+                are bounded by plane/block area and widened before reduction),
+                the knob only trades execution speed.
+    tile_h      Pallas fused-kernel row-tile height override (None = the
+                kernel default: max(8, largest dy) rounded up to 8). An
+                autotuner knob — see ``core.autotune``.
+    chunk       Pallas pair-stream chunk length override (None = kernel
+                default 2048). Must be a multiple of ``copies``.
+    slab_d      Pallas volume-kernel depth-slab override (None = kernel
+                default: max(8, largest dz) rounded up to 8).
     """
 
     levels: int
@@ -115,6 +135,10 @@ class GLCMSpec:
     region_shape: tuple[int, ...] | int | None = None
     region_stride: tuple[int, ...] | int | None = None
     ndim: int = 2
+    accum: str = "auto"
+    tile_h: int | None = None
+    chunk: int | None = None
+    slab_d: int | None = None
 
     def __post_init__(self):
         if self.ndim not in (2, 3):
@@ -142,6 +166,19 @@ class GLCMSpec:
             raise ValueError(f"copies (R) must be >= 1, got {self.copies}")
         if self.num_blocks < 1:
             raise ValueError(f"num_blocks must be >= 1, got {self.num_blocks}")
+        if self.accum not in ACCUM_MODES:
+            raise ValueError(
+                f"unknown accum mode {self.accum!r}; expected one of {ACCUM_MODES}"
+            )
+        for knob in ("tile_h", "chunk", "slab_d"):
+            v = getattr(self, knob)
+            if v is not None:
+                if not isinstance(v, int) or v < 1:
+                    raise ValueError(f"{knob} must be a positive int or None, got {v!r}")
+        if self.chunk is not None and self.chunk % self.copies:
+            raise ValueError(
+                f"chunk ({self.chunk}) must be a multiple of copies ({self.copies})"
+            )
         if self.vrange is not None:
             vmin, vmax = self.vrange
             object.__setattr__(

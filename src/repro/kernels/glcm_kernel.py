@@ -77,6 +77,22 @@ DEFAULT_COPIES = 4     # R, the paper's copy count
 DEFAULT_SLAB_D = 8     # depth slices per slab of the volume kernel
 
 
+def _bin_tile(x: jax.Array, levels: int, lo, span) -> jax.Array:
+    """In-register uniform binning of a raw f32 tile — the same op sequence
+    as ``core.quantize.bin_values`` (f32 affine, floor, clip, int32 cast), so
+    fused-quantize kernel plans are bit-exact with quantize-then-count."""
+    q = jnp.floor((x.astype(jnp.float32) - lo) / span * levels)
+    return jnp.clip(q, 0, levels - 1).astype(jnp.int32)
+
+
+def _quant_block(quant, b: int) -> jax.Array:
+    """Normalize a (lo, span) pair — python floats or per-image (B,) arrays —
+    into the (B, 2) f32 operand the kernels index by the batch grid axis."""
+    lo = jnp.broadcast_to(jnp.asarray(quant[0], jnp.float32).reshape(-1), (b,))
+    span = jnp.broadcast_to(jnp.asarray(quant[1], jnp.float32).reshape(-1), (b,))
+    return jnp.stack([lo, span], axis=1)
+
+
 def _onehot2d(v: jax.Array, levels: int, dtype=jnp.int8) -> jax.Array:
     """(P,) int32 → (P, L) one-hot. Built by iota-compare on the VPU; values
     of -1 (padding / masked votes) yield an all-zero row, dropping the vote."""
@@ -189,17 +205,20 @@ def glcm_vote_pallas(
 # ---------------------------------------------------------------------------
 
 def _fused_kernel(
-    cur_ref,
-    nxt_ref,
-    o_ref,
-    *,
+    *refs,
     levels: int,
     copies: int,
     offsets: tuple[tuple[int, int], ...],
     tile_h: int,
     width: int,
     height: int,
+    fused_quant: bool = False,
 ):
+    # refs is (cur, nxt, o) for pre-quantized input, or (cur, nxt, q, o)
+    # when quantization is fused: q is this image's (1, 2) = (lo, span)
+    # block and the raw f32 tiles are binned IN-REGISTER — the quantized
+    # image never exists in HBM.
+    cur_ref, nxt_ref, o_ref = refs[0], refs[1], refs[-1]
     pid = pl.program_id(1)  # row-tile step within the current image
 
     @pl.when(pid == 0)
@@ -208,6 +227,11 @@ def _fused_kernel(
 
     cur = cur_ref[...].reshape(tile_h, width)
     nxt = nxt_ref[...].reshape(tile_h, width)
+    if fused_quant:
+        q_ref = refs[2]
+        lo, span = q_ref[0, 0], q_ref[0, 1]
+        cur = _bin_tile(cur, levels, lo, span)
+        nxt = _bin_tile(nxt, levels, lo, span)
     both = jnp.concatenate([cur, nxt], axis=0)  # (2*TH, W): tile + halo rows
 
     # Global row index of each tile row (for bottom-of-image masking).
@@ -237,19 +261,24 @@ def _fused_kernel(
 # ---------------------------------------------------------------------------
 
 def _window_kernel(
-    p_ref,
-    o_ref,
-    *,
+    *refs,
     levels: int,
     copies: int,
     offsets: tuple[tuple[int, int], ...],
     rh: int,
     rw: int,
+    fused_quant: bool = False,
 ):
     # One grid cell per (batch, window-row, window-col): this cell's patch is
     # in VMEM and its output block is private, so the whole GLCM is produced
     # by straight assignment — no @pl.when init, no revisited accumulator.
+    # refs is (p, o), or (p, q, o) when quantization is fused — q holds the
+    # patch's image-level (lo, span) (windows share their image's range).
+    p_ref, o_ref = refs[0], refs[-1]
     patch = p_ref[...].reshape(rh, rw)
+    if fused_quant:
+        q_ref = refs[1]
+        patch = _bin_tile(patch, levels, q_ref[0, 0], q_ref[0, 1])
     for k, (dy, dx) in enumerate(offsets):  # static unroll over directions
         # Intra-window pair planes (paper Eq. (2) addressing, region-local):
         # pairs never cross a window boundary, by the workload's definition.
@@ -274,6 +303,7 @@ def glcm_window_pallas(
     offsets: tuple[tuple[int, int], ...],
     copies: int = 1,
     interpret: bool = False,
+    quant=None,
 ) -> jax.Array:
     """Per-window multi-offset GLCMs of an extracted patch grid (int32).
 
@@ -281,6 +311,10 @@ def glcm_window_pallas(
     batched (B, gh, gw, rh, rw) grid → (B, gh, gw, n_offsets, L, L). The
     kernel grid is (B, gh, gw) — one launch computes the whole texture map,
     with each window's patch DMA'd to VMEM and voted independently.
+
+    With ``quant=(lo, span)`` the patches are RAW values, binned in-register
+    per window; per-image (B,) params apply to every window of that image
+    (windows share their image's quantization range).
     """
     if patches.ndim not in (4, 5):
         raise ValueError(
@@ -288,7 +322,7 @@ def glcm_window_pallas(
             f"got {patches.shape}"
         )
     batched = patches.ndim == 5
-    p = patches.astype(jnp.int32)
+    p = patches.astype(jnp.float32 if quant is not None else jnp.int32)
     if not batched:
         p = p[None]
     b, gh, gw, rh, rw = p.shape
@@ -299,6 +333,14 @@ def glcm_window_pallas(
             )
     n_off = len(offsets)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, 1, rh, rw), lambda bi, i, j: (bi, i, j, 0, 0)),
+    ]
+    args = [p]
+    if quant is not None:
+        in_specs.append(pl.BlockSpec((1, 2), lambda bi, i, j: (bi, 0)))
+        args.append(_quant_block(quant, b))
+
     out = pl.pallas_call(
         functools.partial(
             _window_kernel,
@@ -307,18 +349,17 @@ def glcm_window_pallas(
             offsets=tuple(offsets),
             rh=rh,
             rw=rw,
+            fused_quant=quant is not None,
         ),
         grid=(b, gh, gw),
-        in_specs=[
-            pl.BlockSpec((1, 1, 1, rh, rw), lambda bi, i, j: (bi, i, j, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, 1, n_off, levels, levels),
             lambda bi, i, j: (bi, i, j, 0, 0, 0),
         ),
         out_shape=jax.ShapeDtypeStruct((b, gh, gw, n_off, levels, levels), jnp.int32),
         interpret=interpret,
-    )(p)
+    )(*args)
     return out if batched else out[0]
 
 
@@ -336,10 +377,13 @@ def _volume_kernel(
     height: int,
     width: int,
     depth: int,
+    has_halo: bool = True,
+    fused_quant: bool = False,
 ):
-    # refs is (cur, o) when every offset stays in-slab (max dz == 0, no
-    # halo input — half the HBM→VMEM traffic) or (cur, nxt, o) with the
-    # next-slab halo block.
+    # refs is (cur, [nxt,] [q,] o): the next-slab halo block when any offset
+    # has dz > 0 (skipped otherwise — half the HBM→VMEM traffic), and the
+    # (1, 2) = (lo, span) block when quantization is fused (raw f32 slabs
+    # binned in-register; the quantized volume never exists in HBM).
     cur_ref, o_ref = refs[0], refs[-1]
     pid = pl.program_id(1)  # depth-slab step within the current volume
 
@@ -348,8 +392,16 @@ def _volume_kernel(
         o_ref[...] = jnp.zeros_like(o_ref)
 
     cur = cur_ref[...].reshape(slab_d, height, width)
-    if len(refs) == 3:
-        nxt = refs[1][...].reshape(slab_d, height, width)
+    nxt = (
+        refs[1][...].reshape(slab_d, height, width) if has_halo else None
+    )
+    if fused_quant:
+        q_ref = refs[-2]
+        lo, span = q_ref[0, 0], q_ref[0, 1]
+        cur = _bin_tile(cur, levels, lo, span)
+        if has_halo:
+            nxt = _bin_tile(nxt, levels, lo, span)
+    if has_halo:
         both = jnp.concatenate([cur, nxt], axis=0)  # (2·SD, H, W): slab+halo
     else:
         both = cur  # dz == 0 everywhere: dynamic_slice never leaves the slab
@@ -393,6 +445,7 @@ def glcm_volume_pallas(
     slab_d: int = DEFAULT_SLAB_D,
     copies: int = 1,
     interpret: bool = False,
+    quant=None,
 ) -> jax.Array:
     """One pass over quantized volume(s) → multi-direction 3-D GLCMs (int32).
 
@@ -427,7 +480,7 @@ def glcm_volume_pallas(
             raise ValueError(
                 f"in-plane offset (dy={dy}, dx={dx}) exceeds plane ({h}, {w})"
             )
-    vols = vol.astype(jnp.int32)
+    vols = vol.astype(jnp.float32 if quant is not None else jnp.int32)
     if not batched:
         vols = vols[None]
     pad_d = (-d) % slab_d
@@ -438,7 +491,8 @@ def glcm_volume_pallas(
 
     in_specs = [pl.BlockSpec((1, slab_d, h, w), lambda bi, i: (bi, i, 0, 0))]
     args = [volp]
-    if max((dz for dz, _, _ in offsets), default=0) > 0:
+    has_halo = max((dz for dz, _, _ in offsets), default=0) > 0
+    if has_halo:
         # Halo: the NEXT depth slab of the SAME volume (clamped at the
         # last slab; safe — out-of-volume depths are masked in-kernel).
         # Skipped entirely when every offset stays in-slab (dz == 0): the
@@ -450,6 +504,9 @@ def glcm_volume_pallas(
             )
         )
         args.append(volp)
+    if quant is not None:
+        in_specs.append(pl.BlockSpec((1, 2), lambda bi, i: (bi, 0)))
+        args.append(_quant_block(quant, b))
 
     out = pl.pallas_call(
         functools.partial(
@@ -461,6 +518,8 @@ def glcm_volume_pallas(
             height=h,
             width=w,
             depth=d,
+            has_halo=has_halo,
+            fused_quant=quant is not None,
         ),
         grid=(b, steps),
         in_specs=in_specs,
@@ -485,6 +544,7 @@ def glcm_fused_pallas(
     tile_h: int = 8,
     copies: int = 1,
     interpret: bool = False,
+    quant=None,
 ) -> jax.Array:
     """One pass over quantized image(s) → multi-offset GLCMs (int32).
 
@@ -492,6 +552,12 @@ def glcm_fused_pallas(
     L, L); the batch is the leading grid axis, so all B images are processed
     by ONE kernel launch with the per-image accumulator selected by the
     output ``index_map``.
+
+    With ``quant=(lo, span)`` (python floats, or per-image (B,) arrays) the
+    input is RAW values: each f32 tile is binned in-register by the same
+    affine as ``core.quantize.bin_values`` before voting, so the quantized
+    image is never materialized. Padded rows are masked by the row iota, so
+    raw pad values never vote.
 
     ``offsets`` are (dy, dx) pixel offsets (see ``kernels.ref.glcm_offsets``);
     every dy must satisfy 0 <= dy <= tile_h so the halo fits in the next row
@@ -510,7 +576,7 @@ def glcm_fused_pallas(
             raise ValueError(f"dy={dy} must be in [0, tile_h={tile_h}]")
         if abs(dx) >= w:
             raise ValueError(f"|dx|={abs(dx)} must be < width={w}")
-    imgs = img.astype(jnp.int32)
+    imgs = img.astype(jnp.float32 if quant is not None else jnp.int32)
     if not batched:
         imgs = imgs[None]
     pad_h = (-h) % tile_h
@@ -518,6 +584,22 @@ def glcm_fused_pallas(
     b, hp, _ = imgp.shape
     steps = hp // tile_h
     n_off = len(offsets)
+
+    in_specs = [
+        pl.BlockSpec((1, tile_h, w), lambda bi, i: (bi, i, 0)),
+        # Halo: the NEXT row tile of the SAME image (clamped at the
+        # bottom; the clamp is safe because rows >= height are masked
+        # in-kernel).
+        pl.BlockSpec(
+            (1, tile_h, w), lambda bi, i: (bi, jnp.minimum(i + 1, steps - 1), 0)
+        ),
+    ]
+    args = [imgp, imgp]
+    if quant is not None:
+        # This image's (lo, span): a two-scalar block selected by the batch
+        # grid axis — the ONLY quantization state a fused plan materializes.
+        in_specs.append(pl.BlockSpec((1, 2), lambda bi, i: (bi, 0)))
+        args.append(_quant_block(quant, b))
 
     out = pl.pallas_call(
         functools.partial(
@@ -528,21 +610,14 @@ def glcm_fused_pallas(
             tile_h=tile_h,
             width=w,
             height=h,
+            fused_quant=quant is not None,
         ),
         grid=(b, steps),
-        in_specs=[
-            pl.BlockSpec((1, tile_h, w), lambda bi, i: (bi, i, 0)),
-            # Halo: the NEXT row tile of the SAME image (clamped at the
-            # bottom; the clamp is safe because rows >= height are masked
-            # in-kernel).
-            pl.BlockSpec(
-                (1, tile_h, w), lambda bi, i: (bi, jnp.minimum(i + 1, steps - 1), 0)
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, n_off, levels, levels), lambda bi, i: (bi, 0, 0, 0)
         ),
         out_shape=jax.ShapeDtypeStruct((b, n_off, levels, levels), jnp.int32),
         interpret=interpret,
-    )(imgp, imgp)
+    )(*args)
     return out if batched else out[0]

@@ -17,6 +17,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantize import bin_values
 from repro.kernels import ref as _ref
 from repro.kernels.glcm_kernel import (
     DEFAULT_CHUNK,
@@ -47,6 +48,19 @@ def should_interpret(interpret: bool | None = None) -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _bin_planes(planes, levels: int, quant, nd: int):
+    """Fused-quantize pair planes: bin each sliced plane (never the full
+    image) with ``core.quantize.bin_values``.  Per-image (B,) params are
+    reshaped to broadcast over the ``nd`` spatial axes."""
+    lo = jnp.asarray(quant[0], jnp.float32)
+    span = jnp.asarray(quant[1], jnp.float32)
+    if lo.ndim:
+        bshape = lo.shape + (1,) * nd
+        lo = lo.reshape(bshape)
+        span = span.reshape(bshape)
+    return tuple(bin_values(p, levels, lo, span) for p in planes)
+
+
 def glcm_pallas(
     img: jax.Array,
     levels: int,
@@ -57,6 +71,7 @@ def glcm_pallas(
     chunk: int = DEFAULT_CHUNK,
     copies: int = DEFAULT_COPIES,
     interpret: bool | None = None,
+    quant=None,
 ) -> jax.Array:
     """GLCM of quantized image(s) via the pair-stream voting kernel.
 
@@ -67,6 +82,10 @@ def glcm_pallas(
     launch over a (B, steps) grid; with ``offset=`` (an explicit (dy, dx) or
     (dz, dy, dx) tuple overriding ``(d, theta)``), a (D, H, W) volume or
     (B, D, H, W) stack is voted the same way.
+
+    With ``quant=(lo, span)`` the input is RAW values: the sliced pair
+    planes are binned (``core.quantize.bin_values``) on their way into the
+    kernel — a quantized full-size image is never materialized.
     """
     off = tuple(int(v) for v in offset) if offset is not None else (
         _ref.glcm_offsets(d, theta)
@@ -78,6 +97,8 @@ def glcm_pallas(
             f"offset {off}, got shape {img.shape}"
         )
     assoc, rf = _ref.pair_planes_nd(img, off)
+    if quant is not None:
+        assoc, rf = _bin_planes((assoc, rf), levels, quant, nd)
     lead = img.shape[:-nd]
     return glcm_vote_pallas(
         assoc.reshape(lead + (-1,)).astype(jnp.int32),
@@ -97,6 +118,7 @@ def glcm_pallas_multi(
     tile_h: int | None = None,
     copies: int = 1,
     interpret: bool | None = None,
+    quant=None,
 ) -> jax.Array:
     """Multi-offset GLCM in ONE image pass via the fused tiled kernel.
 
@@ -116,6 +138,7 @@ def glcm_pallas_multi(
         tile_h=tile_h,
         copies=copies,
         interpret=should_interpret(interpret),
+        quant=quant,
     )
 
 
@@ -128,6 +151,7 @@ def glcm_pallas_volume(
     slab_d: int | None = None,
     copies: int = 1,
     interpret: bool | None = None,
+    quant=None,
 ) -> jax.Array:
     """Multi-direction 3-D GLCM in ONE volume pass via the depth-slab kernel.
 
@@ -150,6 +174,7 @@ def glcm_pallas_volume(
         slab_d=slab_d,
         copies=copies,
         interpret=should_interpret(interpret),
+        quant=quant,
     )
 
 
@@ -160,6 +185,7 @@ def glcm_pallas_windowed(
     *,
     copies: int = 1,
     interpret: bool | None = None,
+    quant=None,
 ) -> jax.Array:
     """Per-window GLCMs of an extracted patch grid via the window kernel.
 
@@ -175,6 +201,7 @@ def glcm_pallas_windowed(
         offsets=offsets,
         copies=copies,
         interpret=should_interpret(interpret),
+        quant=quant,
     )
 
 

@@ -1,0 +1,159 @@
+"""The persisted autotuner: winner search, JSON sidecar persistence across
+processes, ``compile_plan`` consumption, and plan-cache interaction."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import autotune, backends
+from repro.core.plan import compile_plan, plan_cache_clear, plan_cache_stats
+from repro.core.spec import GLCMSpec
+
+SPEC = GLCMSpec(levels=8, pairs=((1, 0),), quantize="uniform")
+SHAPE = (2, 32, 32)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture
+def sidecar(tmp_path, monkeypatch):
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_PATH", str(path))
+    autotune.autotune_clear()
+    plan_cache_clear()
+    yield path
+    autotune.autotune_clear()
+    plan_cache_clear()
+
+
+def test_store_path_env_override(sidecar):
+    assert autotune.store_path() == sidecar
+
+
+def test_autotune_records_and_persists(sidecar):
+    choice = autotune.autotune(SPEC, SHAPE, trials=1)
+    assert choice.backend in backends.available_backends()
+    assert sidecar.exists()
+    table = json.loads(sidecar.read_text())
+    key = autotune.tune_key(SPEC, SHAPE)
+    assert key in table
+    assert table[key]["backend"] == choice.backend
+    assert table[key]["us"] > 0
+
+
+def test_lookup_returns_winner_and_validates(sidecar):
+    autotune.autotune(SPEC, SHAPE, trials=1)
+    got = autotune.lookup(SPEC, SHAPE)
+    assert got is not None
+    # a corrupted entry (unknown backend / foreign knobs) is ignored, never
+    # trusted
+    table = json.loads(sidecar.read_text())
+    key = autotune.tune_key(SPEC, SHAPE)
+    table[key] = {"backend": "no_such_backend", "knobs": {}}
+    sidecar.write_text(json.dumps(table))
+    autotune.autotune_clear()
+    assert autotune.lookup(SPEC, SHAPE) is None
+    table[key] = {"backend": "onehot", "knobs": {"bogus_knob": 3}}
+    sidecar.write_text(json.dumps(table))
+    autotune.autotune_clear()
+    assert autotune.lookup(SPEC, SHAPE) is None
+
+
+def test_tune_key_canonicalizes_knobs(sidecar):
+    """The key identifies the WORKLOAD: knob settings must not change it."""
+    base = autotune.tune_key(SPEC, SHAPE)
+    assert autotune.tune_key(SPEC.replace(copies=4), SHAPE) == base
+    assert autotune.tune_key(SPEC.replace(scheme="onehot"), SHAPE) == base
+    assert autotune.tune_key(SPEC.replace(chunk=1024), SHAPE) == base
+    # ...while genuine workload changes DO
+    assert autotune.tune_key(SPEC.replace(levels=32), SHAPE) != base
+    assert autotune.tune_key(SPEC, (4, 32, 32)) != base
+
+
+def test_compile_plan_consumes_winner_and_caches(sidecar):
+    choice = autotune.autotune(SPEC, SHAPE, trials=1)
+    plan_cache_clear()
+    p1 = compile_plan(SPEC, SHAPE)
+    assert p1.tuned == choice
+    assert p1.spec.scheme == choice.backend
+    for knob, value in choice.knobs:
+        assert getattr(p1.spec, knob) == value
+    # second compile of the tuned plan: a cache HIT on the same object — no
+    # retrace, no recompile
+    p2 = compile_plan(SPEC, SHAPE)
+    assert p2 is p1
+    stats = plan_cache_stats()
+    assert stats["hits"] >= 1 and stats["misses"] >= 1
+
+
+def test_named_scheme_ignores_winner(sidecar):
+    autotune.autotune(SPEC, SHAPE, trials=1)
+    plan = compile_plan(SPEC.replace(scheme="scatter"), SHAPE)
+    assert plan.tuned is None
+    assert plan.spec.scheme == "scatter"
+
+
+def test_retune_misses_to_fresh_plan(sidecar):
+    """A NEW winner must not serve the stale compiled program: the tuned
+    choice is part of the cache key."""
+    autotune.autotune(SPEC, SHAPE, trials=1)
+    p1 = compile_plan(SPEC, SHAPE)
+    # overwrite the winner with a different backend by hand
+    table = autotune._store()
+    key = autotune.tune_key(SPEC, SHAPE)
+    other = "scatter" if p1.spec.scheme != "scatter" else "onehot"
+    table[key] = {"backend": other, "knobs": {}}
+    p2 = compile_plan(SPEC, SHAPE)
+    assert p2 is not p1
+    assert p2.spec.scheme == other
+
+
+def test_winner_survives_process_boundary(sidecar):
+    """The whole point of the sidecar: a FRESH python process consumes the
+    winner without re-measuring."""
+    choice = autotune.autotune(SPEC, SHAPE, trials=1)
+    code = (
+        "import sys; sys.path.insert(0, 'src'); sys.path.insert(0, 'tests')\n"
+        "from repro.core.plan import compile_plan\n"
+        "from repro.core.spec import GLCMSpec\n"
+        "spec = GLCMSpec(levels=8, pairs=((1, 0),), quantize='uniform')\n"
+        "plan = compile_plan(spec, (2, 32, 32))\n"
+        "assert plan.tuned is not None, 'winner not consumed'\n"
+        f"assert plan.tuned.backend == {choice.backend!r}, plan.tuned\n"
+        "print('consumed', plan.tuned.backend)\n"
+    )
+    env = dict(os.environ, REPRO_AUTOTUNE_PATH=str(sidecar), JAX_PLATFORMS="cpu")
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        cwd=REPO, env=env, timeout=300,
+    )
+    assert r.returncode == 0, r.stderr
+    assert "consumed" in r.stdout
+
+
+def test_autotune_clear_disk(sidecar):
+    autotune.autotune(SPEC, SHAPE, trials=1)
+    assert sidecar.exists()
+    autotune.autotune_clear(disk=True)
+    assert not sidecar.exists()
+    assert autotune.lookup(SPEC, SHAPE) is None
+
+
+def test_missing_sidecar_is_not_an_error(sidecar):
+    assert autotune.lookup(SPEC, SHAPE) is None
+    plan = compile_plan(SPEC, SHAPE)  # "auto" falls back to the resolver
+    assert plan.tuned is None
+
+
+def test_corrupt_sidecar_is_ignored(sidecar):
+    sidecar.write_text("{not json")
+    autotune.autotune_clear()
+    assert autotune.lookup(SPEC, SHAPE) is None
+
+
+def test_tuned_choice_apply():
+    choice = autotune.TunedChoice(backend="onehot", knobs=(("copies", 4),))
+    spec = choice.apply(SPEC)
+    assert spec.scheme == "onehot" and spec.copies == 4

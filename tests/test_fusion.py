@@ -1,0 +1,166 @@
+"""Fused quantize→count execution: bit-exactness with quantize-then-count
+and the structural guarantee — NO quantized full-size intermediate exists in
+a fused plan's traced program (asserted by jaxpr inspection)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.plan import compile_plan
+from repro.core.quantize import quantize_uniform
+from repro.core.schemes import VOLUME_PAIRS
+from repro.core.spec import GLCMSpec
+
+FUSED_2D = ("scatter", "onehot", "native", "pallas", "pallas_fused")
+FUSED_3D = ("scatter", "onehot", "native", "pallas", "pallas_volume")
+
+
+def _raw_stack(rng, shape):
+    # Raw float pixels with per-image dynamic range (no pinned vrange): the
+    # hardest case — (lo, span) must be derived per image inside the plan.
+    return jnp.asarray(rng.random(shape, np.float32) * 200.0 - 30.0)
+
+
+def _int_spatial_eqns(jaxpr, spatial):
+    """Every equation output that is an integer array covering the full
+    spatial extent — what a materialized quantized image would look like."""
+    bad = []
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is None or not hasattr(aval, "shape"):
+                    continue
+                if (
+                    np.issubdtype(aval.dtype, np.integer)
+                    and len(aval.shape) >= len(spatial)
+                    and tuple(aval.shape[-len(spatial):]) == spatial
+                ):
+                    bad.append((eqn.primitive.name, aval.shape, str(aval.dtype)))
+            for sub in eqn.params.values():
+                if hasattr(sub, "jaxpr"):
+                    walk(sub.jaxpr)
+                elif isinstance(sub, (list, tuple)):
+                    for s in sub:
+                        if hasattr(s, "jaxpr"):
+                            walk(s.jaxpr)
+
+    walk(jaxpr)
+    return bad
+
+
+@pytest.mark.parametrize("scheme", FUSED_2D)
+def test_fused_matches_prequantized(scheme):
+    rng = np.random.default_rng(0)
+    img = _raw_stack(rng, (3, 40, 36))
+    spec = GLCMSpec(
+        levels=16, pairs=((1, 0), (1, 45), (2, 90)), quantize="uniform",
+        scheme=scheme,
+    )
+    plan = compile_plan(spec, img.shape)
+    assert plan.fused_quantize
+    got = np.asarray(plan(img))
+    q = jax.vmap(lambda im: quantize_uniform(im, 16))(img)
+    want = np.asarray(compile_plan(spec.replace(quantize=None), q.shape)(q))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("scheme", ("onehot", "native", "pallas_fused", "scatter"))
+def test_fused_matches_prequantized_regions(scheme):
+    rng = np.random.default_rng(1)
+    img = _raw_stack(rng, (2, 64, 64))
+    spec = GLCMSpec(
+        levels=8, pairs=((1, 0), (1, 135)), quantize="uniform", scheme=scheme,
+        region="window", region_shape=16, region_stride=16,
+    )
+    got = np.asarray(compile_plan(spec, img.shape)(img))
+    q = jax.vmap(lambda im: quantize_uniform(im, 8))(img)
+    want = np.asarray(compile_plan(spec.replace(quantize=None), q.shape)(q))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("scheme", FUSED_3D)
+def test_fused_matches_prequantized_volume(scheme):
+    rng = np.random.default_rng(2)
+    vol = _raw_stack(rng, (2, 12, 20, 24))
+    spec = GLCMSpec(
+        levels=8, pairs=VOLUME_PAIRS[:5], quantize="uniform", scheme=scheme,
+        ndim=3,
+    )
+    got = np.asarray(compile_plan(spec, vol.shape)(vol))
+    q = jax.vmap(lambda im: quantize_uniform(im, 8))(vol)
+    want = np.asarray(compile_plan(spec.replace(quantize=None), q.shape)(q))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fused_pinned_vrange_matches():
+    """With spec.vrange pinned the (lo, span) are static floats — no device
+    reduction at all — and results still match the standalone quantizer."""
+    rng = np.random.default_rng(3)
+    raw = jnp.asarray(rng.integers(0, 256, (2, 32, 32)).astype(np.float32))
+    spec = GLCMSpec(
+        levels=32, pairs=((1, 0),), quantize="uniform", vrange=(0, 255),
+        scheme="onehot", symmetric=True,
+    )
+    got = np.asarray(compile_plan(spec, raw.shape)(raw))
+    q = quantize_uniform(raw, 32, vmin=0, vmax=255)
+    want = np.asarray(
+        compile_plan(spec.replace(quantize=None), q.shape)(q)
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("scheme", ("scatter", "onehot", "pallas", "pallas_fused"))
+def test_fused_plan_never_materializes_quantized_image(scheme):
+    """THE structural assertion: the traced program of a fused plan contains
+    no integer array spanning the full (H, W) — the quantized image never
+    exists, not even transiently."""
+    spatial = (48, 40)
+    img = jnp.zeros((2,) + spatial, jnp.float32)
+    spec = GLCMSpec(
+        levels=16, pairs=((1, 0), (1, 45)), quantize="uniform", scheme=scheme,
+    )
+    plan = compile_plan(spec, img.shape)
+    assert plan.fused_quantize
+    jx = jax.make_jaxpr(plan.fn)(img)
+    assert _int_spatial_eqns(jx.jaxpr, spatial) == []
+
+
+def test_fused_volume_plan_never_materializes_quantized_volume():
+    spatial = (8, 24, 20)
+    vol = jnp.zeros((2,) + spatial, jnp.float32)
+    spec = GLCMSpec(
+        levels=8, pairs=VOLUME_PAIRS[:3], quantize="uniform",
+        scheme="pallas_volume", ndim=3,
+    )
+    plan = compile_plan(spec, vol.shape)
+    assert plan.fused_quantize
+    jx = jax.make_jaxpr(plan.fn)(vol)
+    assert _int_spatial_eqns(jx.jaxpr, spatial) == []
+
+
+def test_prequantize_plan_does_materialize():
+    """Positive control for the jaxpr walker: the legacy pre-quantize path
+    (blocked lacks fused_quantize) DOES materialize the quantized image —
+    if the walker missed it, the assertions above would be vacuous."""
+    spatial = (48, 40)
+    img = jnp.zeros((2,) + spatial, jnp.float32)
+    spec = GLCMSpec(
+        levels=16, pairs=((1, 0),), quantize="uniform", scheme="blocked",
+    )
+    plan = compile_plan(spec, img.shape)
+    assert not plan.fused_quantize
+    jx = jax.make_jaxpr(plan.fn)(img)
+    assert _int_spatial_eqns(jx.jaxpr, spatial)
+
+
+def test_equalized_stays_prequantized():
+    """Histogram equalization is a global transform — it must keep the
+    legacy pre-quantize stage even on fused-capable backends."""
+    spec = GLCMSpec(
+        levels=16, pairs=((1, 0),), quantize="equalized", scheme="onehot",
+    )
+    plan = compile_plan(spec, (2, 32, 32))
+    assert not plan.fused_quantize

@@ -1,0 +1,171 @@
+"""Integer-accumulator exactness — deterministic property tests.
+
+The exactness claim: integer voting (uint16/int32 scatter cells, int8→int32
+one-hot matmuls) produces IDENTICAL counts to the float32 path and to the
+NumPy oracle, across every scheme × levels × post-processing combination.
+Hypothesis is not a dependency of this environment, so the property grid is
+a deterministic sweep over seeded inputs (the "always" profile)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schemes
+from repro.core.plan import compile_plan
+from repro.core.spec import GLCMSpec
+from repro.kernels.ref import glcm_reference
+
+from conftest import brute_force_glcm
+
+LEVELS = (2, 8, 32)
+SEEDS = (0, 1, 2)
+
+
+def _img(seed, levels, shape=(23, 31)):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, levels, size=shape).astype(np.int32)
+
+
+def test_count_dtype_boundary():
+    """uint16 cells only when the pair-stream length provably fits."""
+    assert schemes.count_dtype(2**16 - 1) == jnp.uint16
+    assert schemes.count_dtype(2**16) == jnp.int32
+    assert schemes.count_dtype(10) == jnp.uint16
+
+
+def test_vote_dtypes_resolution():
+    vd, ad = schemes.vote_dtypes(jnp.int8)
+    assert (vd, ad) == (jnp.dtype(jnp.int8), jnp.int32)
+    vd, ad = schemes.vote_dtypes(jnp.float32)
+    assert (vd, ad) == (jnp.dtype(jnp.float32), jnp.float32)
+    vd, ad = schemes.vote_dtypes(None)  # CPU host in tests → float32 votes
+    assert ad in (jnp.int32, jnp.float32)
+
+
+@pytest.mark.parametrize("levels", LEVELS)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_scatter_integer_counts_match_oracle(seed, levels):
+    img = _img(seed, levels)
+    got = np.asarray(schemes.glcm_scatter(jnp.asarray(img), levels, 1, 45))
+    want = brute_force_glcm(img, levels, 1, 45)
+    np.testing.assert_array_equal(got, want)
+    # exactness of the uint16 cell path at saturation risk: a constant image
+    # votes EVERY pair into one cell
+    const = np.zeros((200, 200), np.int32)
+    got_c = np.asarray(schemes.glcm_scatter(jnp.asarray(const), levels, 1, 0))
+    assert got_c[0, 0] == 200 * 199  # 39800 pairs: above int16, inside uint16
+
+
+@pytest.mark.parametrize("levels", LEVELS)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_scatter_batch_integer_counts_match_oracle(seed, levels):
+    imgs = np.stack([_img(seed * 10 + i, levels) for i in range(3)])
+    got = np.asarray(
+        schemes.glcm_scatter_batch(
+            jnp.asarray(imgs), levels, ((0, 1), (1, 0), (1, 1))
+        )
+    )
+    for b in range(3):
+        for k, theta in enumerate((0, 90, 135)):
+            want = brute_force_glcm(imgs[b], levels, 1, theta)
+            np.testing.assert_array_equal(got[b, k], want)
+
+
+@pytest.mark.parametrize("levels", LEVELS)
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.int32, jnp.float32, None])
+def test_onehot_vote_dtype_exact(levels, dtype):
+    """int8/int32 voting ≡ float32 voting ≡ oracle, for every vote dtype."""
+    img = _img(7, levels)
+    got = np.asarray(
+        schemes.glcm_onehot(jnp.asarray(img), levels, 1, 90, dtype=dtype)
+    )
+    want = np.asarray(glcm_reference(jnp.asarray(img), levels, 1, 90))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.float32])
+def test_blocked_vote_dtype_exact(dtype):
+    img = _img(11, 16, shape=(24, 24))
+    got = np.asarray(
+        schemes.glcm_blocked(
+            jnp.asarray(img), 16, 1, 45, num_blocks=4, dtype=dtype
+        )
+    )
+    want = brute_force_glcm(img, 16, 1, 45)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.float32])
+def test_windowed_vote_dtype_exact(dtype):
+    img = jnp.asarray(_img(13, 8, shape=(2, 32, 32)))
+    got = np.asarray(
+        schemes.glcm_windowed(
+            img, 8, ((1, 0), (1, 135)), (16, 16), (16, 16),
+            offsets=((0, 1), (1, 1)), dtype=dtype,
+        )
+    )
+    ref = np.asarray(
+        schemes.glcm_windowed(
+            img, 8, ((1, 0), (1, 135)), (16, 16), (16, 16),
+            offsets=((0, 1), (1, 1)), dtype=jnp.float32,
+        )
+    )
+    np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("scheme", ["scatter", "onehot", "blocked"])
+@pytest.mark.parametrize("accum", ["auto", "int", "float32"])
+@pytest.mark.parametrize("symmetric,normalize", [(False, False), (True, True)])
+def test_accum_modes_exact_through_plan(scheme, accum, symmetric, normalize):
+    """spec.accum is a pure execution knob: every mode returns bit-identical
+    float32 results through the plan layer (normalization divides identical
+    integer-valued f32 counts, so even the division matches bitwise)."""
+    levels = 16
+    imgs = jnp.asarray(np.stack([_img(17 + i, levels, (32, 32)) for i in range(2)]))
+    outs = {}
+    for mode in ("auto", "int", "float32"):
+        spec = GLCMSpec(
+            levels=levels, pairs=((1, 0), (1, 45)), scheme=scheme,
+            symmetric=symmetric, normalize=normalize, accum=mode,
+        )
+        outs[mode] = np.asarray(compile_plan(spec, imgs.shape)(imgs))
+    np.testing.assert_array_equal(outs[accum], outs["float32"])
+
+
+def test_int_accum_exact_at_float_precision_cliff():
+    """The motivating case for integer accumulation: counts past 2^24 would
+    silently round in float32 summation order-dependently.  A 4096·4096
+    constant image concentrates ~16.7M votes in ONE cell — right at the f32
+    integer cliff; the integer path must hold it exactly."""
+    n = 4096
+    img = jnp.zeros((n, n), jnp.int32)
+    spec = GLCMSpec(levels=8, pairs=((1, 0),), scheme="scatter", accum="int")
+    out = np.asarray(compile_plan(spec, (n, n))(img))
+    assert out[0, 0, 0] == n * (n - 1)  # 16_773_120 — exact
+
+
+@pytest.mark.parametrize("levels", LEVELS)
+def test_native_counts_match_oracle(levels):
+    from repro.core import native
+
+    imgs = np.stack([_img(23 + i, levels) for i in range(2)]).astype(np.int64)
+    got = native.counts_pairs(imgs, levels, ((0, 1), (1, 1)))
+    assert got.dtype == np.int64
+    for b in range(2):
+        for k, theta in enumerate((0, 135)):
+            want = brute_force_glcm(imgs[b], levels, 1, theta)
+            np.testing.assert_array_equal(got[b, k], want)
+
+
+def test_int8_votes_under_jit_are_deterministic():
+    """int8 one-hot votes through jit: same program, same counts, twice
+    (guards against any nondeterministic accumulate in the int path)."""
+    img = jnp.asarray(_img(31, 32, (64, 64)))
+    f = jax.jit(
+        lambda x: schemes.glcm_onehot(x, 32, 1, 0, dtype=jnp.int8)
+    )
+    a = np.asarray(f(img))
+    b = np.asarray(f(img))
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a, brute_force_glcm(np.asarray(img), 32, 1, 0))

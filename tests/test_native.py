@@ -1,0 +1,126 @@
+"""The host-native NumPy bincount backend: correctness against the oracle,
+the outside-jit dispatch contract, and quantization parity with the jnp
+quantizer (the NumPy twin must be bit-exact)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import native
+from repro.core.plan import compile_plan
+from repro.core.quantize import quantize_uniform, uniform_params
+from repro.core.spec import GLCMSpec
+from repro.core.schemes import VOLUME_PAIRS
+
+from conftest import brute_force_glcm, brute_force_glcm_3d
+
+
+def _imgs(seed, levels, shape=(2, 24, 28)):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, levels, size=shape).astype(np.int32)
+
+
+@pytest.mark.parametrize("levels", [8, 32])
+@pytest.mark.parametrize("theta", [0, 45, 90, 135])
+def test_counts_pairs_matches_brute_force(levels, theta):
+    imgs = _imgs(0, levels)
+    offs = {0: (0, 1), 45: (1, -1), 90: (1, 0), 135: (1, 1)}
+    got = native.counts_pairs(imgs.astype(np.int64), levels, (offs[theta],))
+    for b in range(imgs.shape[0]):
+        want = brute_force_glcm(imgs[b], levels, 1, theta)
+        np.testing.assert_array_equal(got[b, 0], want)
+
+
+def test_counts_pairs_volume():
+    vols = _imgs(1, 8, shape=(2, 6, 10, 12))
+    off = (1, 0, 1)
+    got = native.counts_pairs(vols.astype(np.int64), 8, (off,))
+    for b in range(2):
+        want = brute_force_glcm_3d(vols[b], 8, off)
+        np.testing.assert_array_equal(got[b, 0], want)
+
+
+def test_quantize_stack_matches_jnp_quantizer():
+    """The NumPy binning twin is bit-exact with core.quantize (same float32
+    affine), including per-image dynamic ranges."""
+    rng = np.random.default_rng(2)
+    stack = (rng.random((3, 20, 20)).astype(np.float32) * 300.0) - 50.0
+    spec = GLCMSpec(levels=16, pairs=((1, 0),), quantize="uniform")
+    lo, span = native.uniform_params_np(stack)
+    got = native.quantize_stack(stack, spec, (lo, span))
+    want = np.asarray(
+        jax.vmap(lambda im: quantize_uniform(im, 16))(jnp.asarray(stack))
+    )
+    np.testing.assert_array_equal(got, want)
+    # and the params themselves match the jnp derivation
+    lo_j, span_j = uniform_params(jnp.asarray(stack), batched=True)
+    np.testing.assert_array_equal(np.asarray(lo_j), lo)
+    np.testing.assert_array_equal(np.asarray(span_j), span)
+
+
+def test_native_counts_regions():
+    imgs = _imgs(3, 8, shape=(2, 32, 32))
+    spec = GLCMSpec(
+        levels=8, pairs=((1, 0),), scheme="native",
+        region="tiles", region_shape=16,
+    )
+    got = native.native_counts(imgs, spec, None)
+    assert got.shape == (2, 2, 2, 1, 8, 8)
+    for b in range(2):
+        for gy in range(2):
+            for gx in range(2):
+                patch = imgs[b, gy * 16:(gy + 1) * 16, gx * 16:(gx + 1) * 16]
+                want = brute_force_glcm(patch, 8, 1, 0)
+                np.testing.assert_array_equal(got[b, gy, gx, 0], want)
+
+
+@pytest.mark.parametrize("batched", [False, True])
+def test_native_plan_matches_onehot_plan(batched):
+    shape = (3, 40, 36) if batched else (40, 36)
+    rng = np.random.default_rng(4)
+    img = jnp.asarray(rng.random(shape, np.float32) * 255.0)
+    for kw in (
+        dict(quantize="uniform"),
+        dict(quantize="uniform", symmetric=True, normalize=True),
+        dict(quantize="equalized"),
+    ):
+        spec = GLCMSpec(levels=8, pairs=((1, 0), (1, 90)), scheme="native", **kw)
+        got = np.asarray(compile_plan(spec, img.shape)(img))
+        want = np.asarray(
+            compile_plan(spec.replace(scheme="onehot"), img.shape)(img)
+        )
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_native_plan_volume():
+    vol = jnp.asarray(_imgs(5, 8, shape=(6, 12, 14)))
+    spec = GLCMSpec(levels=8, pairs=VOLUME_PAIRS[:4], scheme="native", ndim=3)
+    got = np.asarray(compile_plan(spec, vol.shape)(vol))
+    want = np.asarray(
+        compile_plan(spec.replace(scheme="onehot"), vol.shape)(vol)
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_native_plan_runs_outside_jit_but_composes_inside():
+    """Concrete input: host path (no pure_callback). Traced input: the same
+    plan object transparently serves jit/vmap contexts."""
+    imgs = jnp.asarray(_imgs(6, 16))
+    spec = GLCMSpec(levels=16, pairs=((1, 0),), scheme="native")
+    plan = compile_plan(spec, imgs.shape)
+    assert plan.host_native
+    direct = np.asarray(plan(imgs))
+    under_jit = np.asarray(jax.jit(plan.fn)(imgs))
+    np.testing.assert_array_equal(direct, under_jit)
+
+
+def test_native_plan_features():
+    imgs = jnp.asarray(_imgs(7, 8, shape=(2, 32, 32)))
+    spec = GLCMSpec(levels=8, pairs=((1, 0), (1, 45)), scheme="native")
+    feats = np.asarray(compile_plan(spec, imgs.shape, features=True)(imgs))
+    want = np.asarray(
+        compile_plan(spec.replace(scheme="onehot"), imgs.shape, features=True)(imgs)
+    )
+    assert feats.shape == (2, 2, 14)
+    np.testing.assert_allclose(feats, want, rtol=1e-5, atol=1e-6)

@@ -1,8 +1,13 @@
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.quantize import quantize_equalized, quantize_uniform
+from repro.core.quantize import (
+    is_identity_quantize,
+    quantize_equalized,
+    quantize_uniform,
+)
 
 
 @pytest.mark.parametrize("levels", [2, 8, 32, 256])
@@ -47,6 +52,39 @@ def test_bad_levels():
         quantize_uniform(jnp.zeros((4, 4)), 1)
     with pytest.raises(ValueError):
         quantize_uniform(jnp.zeros((4, 4)), 257)
+
+
+def test_identity_quantize_bit_exact():
+    """The uint8 / levels=256 / vrange (0, 255) short-circuit: a bare dtype
+    cast must be BIT-EXACT with the float affine it replaces — every one of
+    the 256 possible values round-trips unchanged."""
+    img = jnp.asarray(
+        np.arange(256, dtype=np.uint8).reshape(16, 16)
+    )
+    assert is_identity_quantize(img.dtype, 256, 0, 255)
+    q = quantize_uniform(img, 256, vmin=0, vmax=255)
+    assert q.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(img))
+    # the affine it short-circuits really IS the identity (the claim the
+    # short-circuit rests on): recompute without the uint8 dtype trigger
+    affine = quantize_uniform(img.astype(jnp.float32), 256, vmin=0, vmax=255)
+    np.testing.assert_array_equal(np.asarray(affine), np.asarray(img))
+    # the short-circuit is dtype-gated: nothing else may take it
+    assert not is_identity_quantize(jnp.float32, 256, 0, 255)
+    assert not is_identity_quantize(jnp.uint8, 255, 0, 255)
+    assert not is_identity_quantize(jnp.uint8, 256, 0, 254)
+    assert not is_identity_quantize(jnp.uint8, 256, None, None)
+
+
+def test_identity_quantize_elides_float_ops():
+    """Structural check: the short-circuited program contains no float
+    arithmetic — it is a cast, nothing more."""
+    img = jnp.zeros((8, 8), jnp.uint8)
+    jx = jax.make_jaxpr(
+        lambda x: quantize_uniform(x, 256, vmin=0, vmax=255)
+    )(img)
+    prims = {eqn.primitive.name for eqn in jx.jaxpr.eqns}
+    assert "floor" not in prims and "div" not in prims
 
 
 # ---------------------------------------------------------------------------
