@@ -1,0 +1,42 @@
+"""Static analysis of traced GLCM plans: jaxpr lint rules + capability
+contracts + the registry audit CLI (``python -m repro.analysis.audit``).
+
+The subsystem lints *traced programs*, not source text: every invariant the
+paper's "optimize without losing accuracy" claim rests on (no materialized
+quantized image in fused plans, no float binning in identity-quantize
+plans, exact integer accumulation, no host round-trips in device plans, no
+un-pruned O(L³) eigendecompositions, no f64 promotion) is checked against
+``jax.make_jaxpr`` output — abstract evaluation only, no execution.
+"""
+
+from repro.analysis.jaxpr_lint import (
+    Finding,
+    LintContext,
+    PlanContractError,
+    Rule,
+    get_rule,
+    has_primitive,
+    int_image_eqns,
+    lint_plan,
+    primitive_names,
+    register_rule,
+    registered_rules,
+    sub_jaxprs,
+    walk_eqns,
+)
+
+__all__ = [
+    "Finding",
+    "LintContext",
+    "PlanContractError",
+    "Rule",
+    "get_rule",
+    "has_primitive",
+    "int_image_eqns",
+    "lint_plan",
+    "primitive_names",
+    "register_rule",
+    "registered_rules",
+    "sub_jaxprs",
+    "walk_eqns",
+]

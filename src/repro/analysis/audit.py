@@ -1,0 +1,329 @@
+"""Registry audit: abstract-trace every backend and lint its contracts.
+
+``python -m repro.analysis.audit`` sweeps every registered backend across a
+representative spec matrix (2-D / tiles / window / volume × quantize modes
+× accum modes × feature selections), abstract-traces each resulting plan
+(``jax.make_jaxpr`` — no execution, so the audit runs anywhere in seconds,
+Pallas kernels included), and lints the traced program against the rules
+the contract layer says the backend's declared ``Capabilities`` and the
+spec imply.  A declared capability that is not borne out by the traced
+program fails the audit with a per-backend, per-rule report.
+
+Exit status: 0 when every (backend, case) is clean, 1 when any rule fired.
+``--json PATH`` writes the full machine-readable report (CI uploads it as
+an artifact on failure); ``--backend`` / ``--case`` filter the sweep.
+
+The audit also runs two walker self-checks (positive "dirty" controls) so a
+silently-broken walker cannot make the whole sweep vacuously green: the
+legacy pre-quantize path must *show* the materialized quantized image the
+fused rule forbids, and an mcc-selecting plan must *show* the
+eigendecomposition the pruning rule forbids.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import jax.numpy as jnp
+
+from repro.analysis import jaxpr_lint
+from repro.core import backends as _backends
+from repro.core.plan import compile_plan
+from repro.core.spec import GLCMSpec
+
+__all__ = ["AuditCase", "AuditReport", "audit_cases", "run_audit", "main"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditCase:
+    """One cell of the spec matrix: a workload every capable backend is
+    traced against.  ``dtype`` is the abstract input dtype (never
+    materialized)."""
+
+    name: str
+    spec: GLCMSpec
+    shape: tuple[int, ...]
+    dtype: object = jnp.int32
+    features: bool | tuple[str, ...] = False
+
+
+def audit_cases() -> tuple[AuditCase, ...]:
+    """The representative workload matrix.
+
+    Shapes are small (tracing cost only) but chosen so plane sizes never
+    collide with ``levels`` (the vote-matmul shape heuristic stays
+    unambiguous) and tile/blocked divisibility holds for every backend's
+    validator.
+    """
+    pairs2 = ((1, 0), (1, 45), (2, 90))
+    vol_pairs = ((1, 0), (1, 4), (1, 7))
+    return (
+        # -- 2-D global ---------------------------------------------------
+        AuditCase(
+            "2d/prequantized/int-accum",
+            GLCMSpec(levels=16, pairs=pairs2, accum="int"),
+            (2, 32, 32),
+        ),
+        AuditCase(
+            "2d/prequantized/float-accum",
+            GLCMSpec(levels=16, pairs=pairs2, accum="float32",
+                     symmetric=True, normalize=True),
+            (2, 32, 32),
+        ),
+        AuditCase(
+            "2d/fused-uniform",
+            GLCMSpec(levels=16, pairs=pairs2, quantize="uniform"),
+            (2, 40, 36),
+            dtype=jnp.float32,
+        ),
+        AuditCase(
+            "2d/fused-uniform/int-accum",
+            GLCMSpec(levels=16, pairs=pairs2, quantize="uniform",
+                     accum="int"),
+            (2, 40, 36),
+            dtype=jnp.float32,
+        ),
+        AuditCase(
+            "2d/identity-quantize",
+            GLCMSpec(levels=256, pairs=((1, 0),), quantize="uniform",
+                     vrange=(0, 255)),
+            (24, 20),
+            dtype=jnp.uint8,
+        ),
+        AuditCase(
+            "2d/equalized",
+            GLCMSpec(levels=8, pairs=((1, 0),), quantize="equalized"),
+            (2, 24, 28),
+            dtype=jnp.float32,
+        ),
+        # -- region grids -------------------------------------------------
+        AuditCase(
+            "tiles/fused-uniform",
+            GLCMSpec(levels=8, pairs=((1, 0), (1, 135)), quantize="uniform",
+                     region="tiles", region_shape=16),
+            (2, 32, 32),
+            dtype=jnp.float32,
+        ),
+        AuditCase(
+            "window/int-accum",
+            GLCMSpec(levels=8, pairs=((1, 0),), region="window",
+                     region_shape=12, region_stride=8, accum="int"),
+            (2, 28, 28),
+        ),
+        # -- feature selections -------------------------------------------
+        AuditCase(
+            "features/pruned",
+            GLCMSpec(levels=16, pairs=((1, 0), (1, 45)), normalize=True),
+            (2, 32, 32),
+            features=("contrast", "entropy", "asm_energy"),
+        ),
+        AuditCase(
+            "features/full14",
+            GLCMSpec(levels=8, pairs=((1, 0),), normalize=True),
+            (24, 20),
+            features=True,
+        ),
+        # -- volumetric ----------------------------------------------------
+        AuditCase(
+            "volume/fused-uniform",
+            GLCMSpec(levels=8, pairs=vol_pairs, quantize="uniform", ndim=3),
+            (2, 8, 20, 24),
+            dtype=jnp.float32,
+        ),
+        AuditCase(
+            "volume/int-accum",
+            GLCMSpec(levels=8, pairs=vol_pairs, accum="int", ndim=3),
+            (2, 8, 20, 24),
+        ),
+    )
+
+
+@dataclasses.dataclass
+class AuditReport:
+    """The audit outcome: per-(backend, case) rule runs and findings."""
+
+    findings: list[jaxpr_lint.Finding] = dataclasses.field(default_factory=list)
+    checked: list[dict] = dataclasses.field(default_factory=list)
+    skipped: list[dict] = dataclasses.field(default_factory=list)
+    errors: list[dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings and not self.errors
+
+    def to_dict(self) -> dict:
+        by_backend: dict[str, list] = {}
+        for f in self.findings:
+            by_backend.setdefault(f.backend, []).append(dataclasses.asdict(f))
+        return {
+            "ok": self.ok,
+            "n_checked": len(self.checked),
+            "n_skipped": len(self.skipped),
+            "findings_by_backend": by_backend,
+            "checked": self.checked,
+            "skipped": self.skipped,
+            "errors": self.errors,
+        }
+
+
+def _serves(backend: _backends.Backend, case: AuditCase) -> str | None:
+    """None when ``backend`` can serve ``case``; else the skip reason."""
+    spec = case.spec
+    if not _backends.supports_ndim(backend, spec.ndim):
+        return f"ndim={spec.ndim} unsupported"
+    try:
+        resolved = spec.replace(scheme=backend.name)
+        if backend.validate is not None and spec.region == "global":
+            backend.validate(resolved, case.shape)
+    except ValueError as exc:
+        return str(exc)
+    return None
+
+
+def run_audit(
+    *,
+    backends: tuple[str, ...] | None = None,
+    cases: tuple[AuditCase, ...] | None = None,
+    case_filter: str | None = None,
+) -> AuditReport:
+    """Trace and lint every (backend, case) combination of the live
+    registry.  Pure analysis: nothing executes, no device memory is
+    allocated, and the plan cache absorbs the compiled-side bookkeeping."""
+    report = AuditReport()
+    names = backends if backends is not None else _backends.available_backends()
+    matrix = cases if cases is not None else audit_cases()
+    if case_filter:
+        matrix = tuple(c for c in matrix if case_filter in c.name)
+    for case in matrix:
+        for name in names:
+            backend = _backends.get_backend(name)
+            reason = _serves(backend, case)
+            if reason is not None:
+                report.skipped.append(
+                    {"backend": name, "case": case.name, "reason": reason}
+                )
+                continue
+            spec = case.spec.replace(scheme=name)
+            try:
+                plan = compile_plan(spec, case.shape, features=case.features)
+                findings = jaxpr_lint.lint_plan(plan, dtype=case.dtype)
+            except ValueError as exc:
+                # Plan-time rejection (shape/capability validation) is the
+                # dynamic contract layer doing its job — an audit skip.
+                report.skipped.append(
+                    {"backend": name, "case": case.name, "reason": str(exc)}
+                )
+                continue
+            except Exception as exc:  # noqa: BLE001 — an audit must not die
+                report.errors.append(
+                    {"backend": name, "case": case.name,
+                     "error": f"{type(exc).__name__}: {exc}"}
+                )
+                continue
+            report.findings.extend(findings)
+            report.checked.append(
+                {"backend": name, "case": case.name,
+                 "rules": list(_rules_run(plan, case)),
+                 "clean": not findings}
+            )
+    _walker_self_checks(report)
+    return report
+
+
+def _rules_run(plan, case: AuditCase) -> tuple[str, ...]:
+    from repro.analysis import contracts
+
+    ctx = jaxpr_lint.LintContext(
+        jaxpr=None, spec=plan.spec, backend=plan.backend, shape=plan.shape,
+        dtype=jnp.dtype(case.dtype), features=plan.features,
+        fused_quantize=plan.fused_quantize, host_native=plan.host_native,
+    )
+    return contracts.applicable_rules(ctx)
+
+
+def _walker_self_checks(report: AuditReport) -> None:
+    """Positive "dirty" controls: programs that MUST trip the walker.
+
+    If the walker silently broke (a jax upgrade renaming a primitive, a
+    sub-jaxpr container it stopped descending into), every rule above would
+    pass vacuously — these two checks fail the audit instead.
+    """
+    # 1. The legacy pre-quantize path (blocked lacks fused_quantize) DOES
+    #    materialize the quantized image; the walker must see it.
+    spec = GLCMSpec(levels=16, pairs=((1, 0),), quantize="uniform",
+                    scheme="blocked")
+    plan = compile_plan(spec, (2, 32, 32))
+    jx = jaxpr_lint.trace_plan(plan, jnp.float32)
+    if not jaxpr_lint.int_image_eqns(jx, (32, 32)):
+        report.errors.append({
+            "backend": "blocked", "case": "self-check/dirty-int-image",
+            "error": "walker missed the materialized quantized image the "
+                     "pre-quantize path is known to produce",
+        })
+    # 2. Selecting max_correlation_coefficient must SHOW the eigh the
+    #    pruning rule forbids elsewhere.
+    spec = GLCMSpec(levels=8, pairs=((1, 0),), normalize=True, scheme="onehot")
+    plan = compile_plan(spec, (24, 20),
+                        features=("max_correlation_coefficient",))
+    jx = jaxpr_lint.trace_plan(plan, jnp.int32)
+    if not any(p.startswith("eig") for p in jaxpr_lint.primitive_names(jx)):
+        report.errors.append({
+            "backend": "onehot", "case": "self-check/dirty-eigh",
+            "error": "walker missed the eigendecomposition an mcc-selecting "
+                     "plan is known to contain",
+        })
+
+
+def _print_report(report: AuditReport, *, verbose: bool = False) -> None:
+    print(
+        f"plan-contract audit: {len(report.checked)} (backend, case) plans "
+        f"traced, {len(report.skipped)} skipped, "
+        f"{len(report.findings)} finding(s), {len(report.errors)} error(s)"
+    )
+    if verbose:
+        for row in report.checked:
+            state = "ok " if row["clean"] else "FAIL"
+            print(f"  {state} {row['backend']:<14} {row['case']:<28} "
+                  f"rules: {', '.join(row['rules'])}")
+        for row in report.skipped:
+            print(f"  skip {row['backend']:<14} {row['case']:<28} "
+                  f"({row['reason']})")
+    for f in report.findings:
+        print(f"  FINDING {f}")
+    for row in report.errors:
+        print(f"  ERROR {row['backend']} / {row['case']}: {row['error']}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=(
+            "Audit every registered GLCM backend's declared capabilities "
+            "against its abstractly-traced program (no execution)."
+        )
+    )
+    ap.add_argument("--backend", action="append", default=None,
+                    help="audit only this backend (repeatable)")
+    ap.add_argument("--case", default=None,
+                    help="audit only cases whose name contains this substring")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the machine-readable report here")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    report = run_audit(
+        backends=tuple(args.backend) if args.backend else None,
+        case_filter=args.case,
+    )
+    _print_report(report, verbose=args.verbose)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report.to_dict(), fh, indent=1, sort_keys=True)
+        print(f"report -> {args.json}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,163 @@
+"""Capability → rule contracts: what each declared capability must prove.
+
+``core.backends.Capabilities`` is *declared, not probed* — a backend can
+claim ``fused_quantize=True`` while eagerly materializing the quantized
+image, and nothing in the execution layer would notice: the plan would
+happily hand it raw pixels and silently pay the memory traffic the claim
+was supposed to eliminate.  This module is the closing of that gap: it maps
+every ``Capabilities`` field to the lint rules (from
+:mod:`repro.analysis.jaxpr_lint`) that *verify* the claim against the
+backend's traced program, and every spec-level execution guarantee
+(``accum="int"`` exactness, ``select=`` pruning, the f32/i32 dtype
+contract) to the rule enforcing it.
+
+Every field of ``Capabilities`` must be classified here, in exactly one of:
+
+* :data:`CAPABILITY_RULES` — fields whose claim is a *traceable* property
+  of the jaxpr, mapped to the enforcing rule names (conditioned on the
+  spec configurations under which the property is observable);
+* :data:`DYNAMIC_CAPABILITIES` — fields whose claim is enforced at
+  plan/registry time (shape validation, dispatch routing, registration
+  invariants) and has no jaxpr-observable footprint, with the reason.
+
+``tests/test_analysis.py`` asserts the classification is total, so adding
+a ``Capabilities`` field without deciding how it is audited fails CI.
+
+:func:`applicable_rules` is the single decision point ``lint_plan`` and the
+audit CLI consult: given a traced-plan :class:`~repro.analysis.jaxpr_lint.
+LintContext` it returns the rule names whose preconditions the plan meets.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.analysis.jaxpr_lint import LintContext
+from repro.core.quantize import is_identity_quantize
+
+__all__ = [
+    "CAPABILITY_RULES",
+    "DYNAMIC_CAPABILITIES",
+    "SPEC_RULES",
+    "applicable_rules",
+]
+
+
+# Capability fields whose declaration implies a jaxpr-traceable property,
+# mapped to the rule names that enforce it.  The rules still gate on the
+# spec configuration making the property observable (see the predicates in
+# ``applicable_rules``): fused quantization is only visible in a
+# quantize="uniform" plan, the identity short-circuit only with a uint8
+# levels=256 vrange=(0,255) workload, the exactly-one-callback contract
+# only in the host-native backend's traced fallback.
+CAPABILITY_RULES: dict[str, tuple[str, ...]] = {
+    "fused_quantize": ("fused-no-int-image", "identity-quantize-float-free"),
+    "host_native": ("no-host-callback",),
+}
+
+# Capability fields with no jaxpr-observable footprint: their claims are
+# enforced dynamically (plan-time validation, dispatch routing, register()
+# invariants), so no lint rule can — or needs to — audit them.
+DYNAMIC_CAPABILITIES: dict[str, str] = {
+    "multi_offset_fused": (
+        "a dispatch-granularity claim (all offsets served by ONE compiled "
+        "program); every plan is one jitted program by construction, so the "
+        "jaxpr cannot distinguish it"
+    ),
+    "batch_grid": (
+        "a kernel-launch topology claim (batch rides the pallas grid); "
+        "enforced by the kernel's grid construction, invisible above the "
+        "pallas_call boundary"
+    ),
+    "tpu_only": (
+        "a compilation-target claim; enforced by resolve_scheme/autotune "
+        "eligibility, not representable in a platform-agnostic jaxpr"
+    ),
+    "sharded_partial": (
+        "presence of the local_partial hook, consumed by the distributed "
+        "layer; enforced at register()/glcm_sharded dispatch time"
+    ),
+    "region_grid": (
+        "presence of the region_compute hook; register() enforces the "
+        "cap↔hook pairing and compute_regions routes on it"
+    ),
+    "volumetric": (
+        "a shape-domain claim (serves ndim=3 specs); enforced pre-trace by "
+        "supports_ndim in compile_plan"
+    ),
+    "volume_only": (
+        "a shape-domain claim (serves ONLY ndim=3 specs); enforced "
+        "pre-trace by supports_ndim in compile_plan"
+    ),
+}
+
+# Spec-level execution guarantees (independent of any capability), mapped
+# to their enforcing rule.  Conditions live in ``applicable_rules``.
+SPEC_RULES: dict[str, str] = {
+    "accum='int' exact integer accumulation": "accum-exact-width",
+    "select= prunes the O(L^3) eigendecomposition": "pruned-no-eigh",
+    "float32/int32 dtype contract": "no-f64-promotion",
+}
+
+
+def _selects_mcc(features) -> bool:
+    """Whether the plan's feature selection includes the one feature whose
+    computation legitimately contains an eigendecomposition."""
+    if features is True:
+        return True
+    if features is False:
+        return False
+    return "max_correlation_coefficient" in features
+
+
+def _vrange(spec) -> tuple[float | None, float | None]:
+    return spec.vrange if spec.vrange is not None else (None, None)
+
+
+def applicable_rules(ctx: LintContext) -> tuple[str, ...]:
+    """The rule names whose preconditions ``ctx``'s plan meets.
+
+    This is the contract layer's single decision point: capability-implied
+    rules fire only for backends declaring the capability (and only under
+    spec configurations where the property is observable); spec-implied
+    rules fire from the spec alone.
+    """
+    spec = ctx.spec
+    caps = ctx.backend.caps
+    rules: list[str] = []
+
+    identity = spec.quantize == "uniform" and is_identity_quantize(
+        jnp.dtype(ctx.dtype), spec.levels, *_vrange(spec)
+    )
+
+    # -- capability contracts -------------------------------------------
+    if caps.fused_quantize and ctx.fused_quantize and not identity:
+        # The plan actually took the fused path (quantize="uniform" on a
+        # capable backend): the quantized image must never materialize.
+        # Identity-quantize workloads are exempt — there the INPUT already
+        # holds the level indices, so an image-shaped integer array is the
+        # workload itself, not a materialized derived copy; the
+        # identity-quantize-float-free rule audits that configuration.
+        rules.append("fused-no-int-image")
+    if identity and not spec.normalize and ctx.features is False:
+        # Identity-quantize workload (uint8, levels=256, vrange (0, 255)):
+        # the plan must be free of binning arithmetic.  normalize/features
+        # legitimately divide, so the floor/div probe only applies to bare
+        # counting plans (the audit matrix covers exactly that shape).
+        rules.append("identity-quantize-float-free")
+    # The callback contract applies to EVERY plan: zero host round-trips
+    # for device backends, exactly one for the host-native fallback.
+    rules.append("no-host-callback")
+
+    # -- spec contracts -------------------------------------------------
+    if spec.accum == "int" and spec.quantize != "equalized":
+        # "equalized" runs a (float) histogram CDF before counting; its
+        # scatter is a quantile table, not a count accumulator, and with
+        # levels=sqrt(nbins) it is shape-indistinguishable from one — the
+        # exactness contract is audited on uniform/pre-quantized plans.
+        rules.append("accum-exact-width")
+    if not _selects_mcc(ctx.features):
+        rules.append("pruned-no-eigh")
+    rules.append("no-f64-promotion")
+
+    return tuple(rules)

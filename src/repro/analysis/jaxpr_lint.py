@@ -1,0 +1,531 @@
+"""A jaxpr lint engine: ONE generic walker + a registry of contract rules.
+
+The accuracy/performance invariants this repo ships ("optimization without
+losing the computational accuracy") are *structural properties of the traced
+program*, not of any particular output: a fused-quantize plan must contain
+no integer image-shaped intermediate, an identity-quantize plan no float
+binning arithmetic, an ``accum="int"`` plan no float count accumulation, a
+``select=``-pruned feature plan no O(L³) eigendecomposition.  Before this
+module those properties were asserted by three hand-rolled jaxpr walkers
+duplicated across the test suite — and nothing checked them against the
+capabilities each backend *declares* in ``core.backends.Capabilities``.
+
+This module provides the shared machinery:
+
+* :func:`walk_eqns` — one recursive equation iterator that descends into
+  every sub-jaxpr a primitive carries (``scan``/``while``/``cond`` bodies,
+  ``pjit``/``closed_call`` calls, ``custom_jvp``/``custom_vjp`` envelopes,
+  ``pallas_call`` kernel bodies), however the parameter is spelled
+  (``jaxpr=``, ``call_jaxpr=``, ``branches=``, lists/tuples of either open
+  or closed jaxprs).
+* small queries built on it — :func:`primitive_names`,
+  :func:`has_primitive`, :func:`int_image_eqns` — that the test suite
+  uses directly in place of its former private walkers.
+* a rule registry (:class:`Rule`, :func:`register_rule`, :func:`get_rule`)
+  of named contract checks over a :class:`LintContext`, and
+  :func:`lint_plan`, which abstract-traces a compiled
+  :class:`~repro.core.plan.GLCMPlan` (``jax.make_jaxpr`` on a
+  ``ShapeDtypeStruct`` — no execution, runs anywhere in seconds) and
+  returns the :class:`Finding` list of every applicable rule.
+
+Which rules apply to which plan is *not* decided here: that mapping — from
+declared ``Capabilities`` fields and spec properties to implied rules — is
+the contract layer (:mod:`repro.analysis.contracts`).  The CLI that sweeps
+the whole registry is :mod:`repro.analysis.audit`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Callable, Iterable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Finding",
+    "LintContext",
+    "PlanContractError",
+    "Rule",
+    "all_avals",
+    "get_rule",
+    "has_primitive",
+    "int_image_eqns",
+    "lint_plan",
+    "primitive_names",
+    "register_rule",
+    "registered_rules",
+    "sub_jaxprs",
+    "walk_eqns",
+]
+
+
+# ---------------------------------------------------------------------------
+# The one generic walker
+# ---------------------------------------------------------------------------
+
+
+def _as_open(jx):
+    """Normalize a Jaxpr / ClosedJaxpr to the open Jaxpr carrying ``eqns``."""
+    inner = getattr(jx, "jaxpr", None)
+    return inner if inner is not None else jx
+
+
+def sub_jaxprs(eqn) -> Iterator:
+    """Every sub-jaxpr carried by ``eqn``'s params, open or closed, however
+    the primitive spells it — ``jaxpr``/``call_jaxpr`` values, ``branches``
+    tuples, Pallas grid-mapping wrappers, or any list/tuple mixing them."""
+    for param in eqn.params.values():
+        candidates: Iterable = (
+            param if isinstance(param, (list, tuple)) else (param,)
+        )
+        for cand in candidates:
+            # A ClosedJaxpr (has .jaxpr) or a bare Jaxpr (has .eqns); Pallas'
+            # GridMapping wraps its kernel the same way (.jaxpr).
+            if hasattr(cand, "eqns") or hasattr(cand, "jaxpr"):
+                opened = _as_open(cand)
+                if hasattr(opened, "eqns"):
+                    yield opened
+
+
+def walk_eqns(jaxpr, *, enter_pallas: bool = True) -> Iterator:
+    """Depth-first iterator over every equation of ``jaxpr`` (open or
+    closed), recursing into all nested sub-jaxprs via :func:`sub_jaxprs`.
+
+    ``enter_pallas=False`` stops at ``pallas_call`` boundaries: everything
+    inside a kernel body lives in VMEM/registers by construction, so checks
+    about *materialized* (HBM-resident) arrays must not look there."""
+    opened = _as_open(jaxpr)
+    for eqn in opened.eqns:
+        yield eqn
+        if not enter_pallas and eqn.primitive.name == "pallas_call":
+            continue
+        for sub in sub_jaxprs(eqn):
+            yield from walk_eqns(sub, enter_pallas=enter_pallas)
+
+
+def primitive_names(jaxpr) -> set[str]:
+    """The set of primitive names appearing anywhere in ``jaxpr``."""
+    return {eqn.primitive.name for eqn in walk_eqns(jaxpr)}
+
+
+def has_primitive(jaxpr, name: str) -> bool:
+    return any(eqn.primitive.name == name for eqn in walk_eqns(jaxpr))
+
+
+def all_avals(jaxpr, *, enter_pallas: bool = True) -> Iterator[tuple[object, object]]:
+    """(eqn, aval) for every shaped equation output, nested jaxprs included."""
+    for eqn in walk_eqns(jaxpr, enter_pallas=enter_pallas):
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                yield eqn, aval
+
+
+def int_image_eqns(
+    jaxpr, spatial: tuple[int, ...]
+) -> list[tuple[str, tuple[int, ...], str]]:
+    """Every equation output that is an integer array covering the full
+    ``spatial`` extent — what a materialized quantized image looks like.
+    Returns (primitive name, shape, dtype) triples; empty means the traced
+    program never holds an image-shaped integer intermediate.
+
+    Pallas kernel bodies are NOT descended into: a kernel block legitimately
+    binned in registers can span the full spatial extent (the depth-slab
+    volume kernel's does) without ever touching HBM."""
+    spatial = tuple(int(s) for s in spatial)
+    bad = []
+    for eqn, aval in all_avals(jaxpr, enter_pallas=False):
+        if (
+            np.issubdtype(aval.dtype, np.integer)
+            and len(aval.shape) >= len(spatial)
+            and tuple(aval.shape[-len(spatial):]) == spatial
+        ):
+            bad.append((eqn.primitive.name, tuple(aval.shape), str(aval.dtype)))
+    return bad
+
+
+# ---------------------------------------------------------------------------
+# Rules: named contract checks over a traced plan
+# ---------------------------------------------------------------------------
+
+
+class PlanContractError(ValueError):
+    """A compile-time lint (``compile_plan(..., check="lint")`` or
+    ``REPRO_PLAN_LINT=1``) found contract violations in the traced plan.
+    ``findings`` carries the full :class:`Finding` tuple."""
+
+    def __init__(self, findings):
+        self.findings = tuple(findings)
+        lines = "\n".join(f"  {f}" for f in self.findings)
+        super().__init__(
+            f"plan violates {len(self.findings)} traced contract(s):\n{lines}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One contract violation: ``rule`` failed for ``backend`` on the plan
+    described by ``spec`` (a compact repr) at ``shape``."""
+
+    rule: str
+    backend: str
+    message: str
+    spec: str = ""
+    shape: tuple[int, ...] = ()
+
+    def __str__(self) -> str:
+        where = f"{self.backend} @ {self.shape}" if self.shape else self.backend
+        return f"[{self.rule}] {where}: {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class LintContext:
+    """Everything a rule may inspect: the traced program plus the plan's
+    resolved spec, backend, concrete shape and input dtype.
+
+    ``jaxpr`` is the ClosedJaxpr of the plan's jitted program, traced
+    abstractly (for host-native plans this is the jittable ``pure_callback``
+    fallback — the only traced form such a plan has).  ``features`` is the
+    plan's canonical features argument (False, True, or a name tuple).
+    """
+
+    jaxpr: object
+    spec: object
+    backend: object          # core.backends.Backend
+    shape: tuple[int, ...]
+    dtype: object
+    features: bool | tuple[str, ...] = False
+    fused_quantize: bool = False
+    host_native: bool = False
+
+    @property
+    def spatial(self) -> tuple[int, ...]:
+        return tuple(self.shape[-self.spec.ndim:])
+
+    @property
+    def levels(self) -> int:
+        return self.spec.levels
+
+    def finding(self, rule: str, message: str) -> Finding:
+        return Finding(
+            rule=rule,
+            backend=self.backend.name,
+            message=message,
+            spec=_spec_summary(self.spec),
+            shape=self.shape,
+        )
+
+
+def _spec_summary(spec) -> str:
+    bits = [f"L={spec.levels}", f"pairs={len(spec.pairs)}", f"ndim={spec.ndim}"]
+    if spec.quantize:
+        bits.append(f"quantize={spec.quantize}")
+    if spec.region != "global":
+        bits.append(f"region={spec.region}")
+    if spec.accum != "auto":
+        bits.append(f"accum={spec.accum}")
+    return " ".join(bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One named contract check.
+
+    ``check(ctx)`` returns violation messages (empty list = clean).  Rules
+    never decide their own applicability — :mod:`repro.analysis.contracts`
+    maps capability fields and spec properties to the rules they imply, so
+    a rule body may assume its preconditions hold.
+    """
+
+    name: str
+    description: str
+    check: Callable[[LintContext], list[str]]
+
+
+_RULES: dict[str, Rule] = {}
+
+
+def register_rule(rule: Rule) -> Rule:
+    if rule.name in _RULES:
+        raise ValueError(f"lint rule {rule.name!r} is already registered")
+    _RULES[rule.name] = rule
+    return rule
+
+
+def get_rule(name: str) -> Rule:
+    try:
+        return _RULES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown lint rule {name!r}; available: {sorted(_RULES)}"
+        ) from None
+
+
+def registered_rules() -> tuple[str, ...]:
+    return tuple(sorted(_RULES))
+
+
+# ---------------------------------------------------------------------------
+# The built-in rules
+# ---------------------------------------------------------------------------
+
+
+def _check_fused_no_int_image(ctx: LintContext) -> list[str]:
+    bad = int_image_eqns(ctx.jaxpr, ctx.spatial)
+    return [
+        f"integer image-shaped intermediate {shape} {dtype} (from "
+        f"{prim!r}) — the quantized image was materialized despite "
+        f"caps.fused_quantize"
+        for prim, shape, dtype in bad
+    ]
+
+
+register_rule(Rule(
+    name="fused-no-int-image",
+    description=(
+        "A fused-quantize plan must never materialize the quantized image: "
+        "no integer array spanning the full spatial extent may appear in "
+        "the traced program (binning happens on sliced pair planes / "
+        "in-register kernel tiles)."
+    ),
+    check=_check_fused_no_int_image,
+))
+
+
+def _check_identity_quantize_float_free(ctx: LintContext) -> list[str]:
+    # Binning is floor((x - lo) / span * L): floor and div are its signature
+    # ops and appear nowhere else in a post-processing-free counting plan.
+    prims = primitive_names(ctx.jaxpr)
+    out = []
+    for prim in ("floor", "div"):
+        if prim in prims:
+            out.append(
+                f"float binning arithmetic ({prim!r}) in a provably-identity "
+                "quantize plan (uint8 input, levels=256, vrange (0, 255)) — "
+                "the quantize stage must short-circuit to a dtype cast"
+            )
+    return out
+
+
+register_rule(Rule(
+    name="identity-quantize-float-free",
+    description=(
+        "When uniform quantization is provably the identity (uint8 input, "
+        "levels=256, vrange pinned to (0, 255)) the traced plan must "
+        "contain no binning arithmetic (floor/div): a dtype cast suffices "
+        "and anything more is wasted memory traffic."
+    ),
+    check=_check_identity_quantize_float_free,
+))
+
+
+def _is_count_scatter(aval, levels: int) -> bool:
+    """Whether a scatter output looks like a GLCM count accumulator: trailing
+    (L, L) cells, or the flat (… · L²,) linearized form the batched scatter
+    uses."""
+    shape = tuple(aval.shape)
+    if len(shape) >= 2 and shape[-2:] == (levels, levels):
+        return True
+    cells = levels * levels
+    return len(shape) == 1 and shape[0] % cells == 0
+
+
+def _is_vote_dot(eqn, levels: int) -> bool:
+    """Whether a dot_general is a vote matmul: (…, L, L) output contracted
+    from at least one pair-stream-shaped input (trailing dims ≠ (L, L) —
+    this excludes the Haralick f14 ``A·Aᵀ`` square-matrix product)."""
+    out_aval = eqn.outvars[0].aval
+    shape = tuple(getattr(out_aval, "shape", ()))
+    if len(shape) < 2 or shape[-2:] != (levels, levels):
+        return False
+    for v in eqn.invars:
+        aval = getattr(v, "aval", None)
+        ishape = tuple(getattr(aval, "shape", ()))
+        if len(ishape) >= 2 and ishape[-2:] != (levels, levels):
+            return True
+    return False
+
+
+def _check_accum_exact_width(ctx: LintContext) -> list[str]:
+    out = []
+    levels = ctx.levels
+    for eqn in walk_eqns(ctx.jaxpr):
+        name = eqn.primitive.name
+        aval = getattr(eqn.outvars[0], "aval", None) if eqn.outvars else None
+        if aval is None or not hasattr(aval, "dtype"):
+            continue
+        if name in ("scatter-add", "scatter_add"):
+            if _is_count_scatter(aval, levels) and not np.issubdtype(
+                aval.dtype, np.integer
+            ):
+                out.append(
+                    f"count scatter accumulates in {aval.dtype} "
+                    f"(shape {tuple(aval.shape)}) — accum='int' requires "
+                    "exact uint16/int32 cells widened only at the final "
+                    "reduction"
+                )
+        elif name == "dot_general":
+            if _is_vote_dot(eqn, levels) and not np.issubdtype(
+                aval.dtype, np.integer
+            ):
+                out.append(
+                    f"vote matmul accumulates in {aval.dtype} "
+                    f"(shape {tuple(aval.shape)}) — accum='int' requires "
+                    "integer votes with int32 accumulation"
+                )
+    return out
+
+
+register_rule(Rule(
+    name="accum-exact-width",
+    description=(
+        "An accum='int' plan must accumulate votes in exact narrow integer "
+        "arithmetic: every count scatter and every vote matmul produces an "
+        "integer dtype, widened to float32 only on the final (…, L, L) "
+        "counts."
+    ),
+    check=_check_accum_exact_width,
+))
+
+
+_CALLBACK_PRIMS = ("pure_callback", "io_callback")
+
+
+def _check_no_host_callback(ctx: LintContext) -> list[str]:
+    n = sum(
+        1 for eqn in walk_eqns(ctx.jaxpr)
+        if eqn.primitive.name in _CALLBACK_PRIMS
+    )
+    if ctx.host_native:
+        if n != 1:
+            return [
+                f"host-native traced fallback must contain exactly ONE host "
+                f"callback (the NumPy counting core), found {n}"
+            ]
+        return []
+    if n:
+        return [
+            f"device plan contains {n} host callback(s) — every round-trip "
+            "through the host serializes the device stream"
+        ]
+    return []
+
+
+register_rule(Rule(
+    name="no-host-callback",
+    description=(
+        "Device-backend plans must contain no pure_callback/io_callback; "
+        "the host-native backend's traced fallback must contain exactly "
+        "one (its NumPy counting core)."
+    ),
+    check=_check_no_host_callback,
+))
+
+
+def _check_pruned_no_eigh(ctx: LintContext) -> list[str]:
+    bad = sorted(
+        p for p in primitive_names(ctx.jaxpr) if p.startswith("eig")
+    )
+    if bad:
+        return [
+            f"O(L³) eigendecomposition {bad} in a plan whose feature "
+            "selection excludes max_correlation_coefficient — select= must "
+            "prune it"
+        ]
+    return []
+
+
+register_rule(Rule(
+    name="pruned-no-eigh",
+    description=(
+        "A plan whose Haralick selection excludes "
+        "max_correlation_coefficient (including features=False) must "
+        "contain no eigendecomposition — the O(L³) term select= exists to "
+        "prune."
+    ),
+    check=_check_pruned_no_eigh,
+))
+
+
+def _check_no_f64_promotion(ctx: LintContext) -> list[str]:
+    out = []
+    for eqn, aval in all_avals(ctx.jaxpr):
+        if aval.dtype == np.float64:
+            out.append(
+                f"float64 intermediate {tuple(aval.shape)} (from "
+                f"{eqn.primitive.name!r}) — plans are a float32/int32 "
+                "contract; f64 doubles bandwidth and is silently slow on "
+                "accelerators"
+            )
+            if len(out) >= 4:  # enough evidence; avoid message floods
+                break
+    return out
+
+
+register_rule(Rule(
+    name="no-f64-promotion",
+    description=(
+        "No float64 value may appear anywhere in a traced plan: the "
+        "execution contract is float32/int32 and silent f64 promotion "
+        "doubles memory traffic (and falls off the fast path on "
+        "accelerators)."
+    ),
+    check=_check_no_f64_promotion,
+))
+
+
+# ---------------------------------------------------------------------------
+# Plan entry point
+# ---------------------------------------------------------------------------
+
+
+def default_input_dtype(spec) -> object:
+    """The representative input dtype for abstract-tracing a plan: raw float
+    pixels when the plan quantizes, already-quantized int32 levels when it
+    does not."""
+    return jnp.float32 if spec.quantize is not None else jnp.int32
+
+
+def trace_plan(plan, dtype=None):
+    """Abstract-trace a compiled plan — ``jax.make_jaxpr`` on a
+    ``ShapeDtypeStruct``; no input is materialized and nothing executes."""
+    dtype = default_input_dtype(plan.spec) if dtype is None else dtype
+    arg = jax.ShapeDtypeStruct(plan.shape, dtype)
+    return jax.make_jaxpr(plan.fn)(arg)
+
+
+def lint_plan(plan, *, dtype=None, rules: Iterable[str] | None = None):
+    """Lint one compiled :class:`~repro.core.plan.GLCMPlan`.
+
+    Traces the plan abstractly at its compiled shape (``dtype`` defaults to
+    :func:`default_input_dtype`), selects the applicable rules from the
+    contract layer (or runs exactly ``rules`` when given), and returns a
+    tuple of :class:`Finding` — empty means every implied contract is borne
+    out by the traced program.
+    """
+    from repro.analysis import contracts  # late: contracts imports this module
+
+    dtype = default_input_dtype(plan.spec) if dtype is None else dtype
+    dtype = jnp.dtype(dtype)
+    jaxpr = trace_plan(plan, dtype)
+    ctx = LintContext(
+        jaxpr=jaxpr,
+        spec=plan.spec,
+        backend=plan.backend,
+        shape=plan.shape,
+        dtype=dtype,
+        features=plan.features,
+        fused_quantize=plan.fused_quantize,
+        host_native=plan.host_native,
+    )
+    if rules is None:
+        names = contracts.applicable_rules(ctx)
+    else:
+        names = tuple(rules)
+    findings = []
+    for name in names:
+        rule = get_rule(name)
+        findings.extend(ctx.finding(name, msg) for msg in rule.check(ctx))
+    return tuple(findings)

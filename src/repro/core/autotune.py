@@ -254,12 +254,21 @@ def autotune(
     trials: int = 3,
     persist: bool = True,
     verbose: bool = False,
+    report: dict | None = None,
 ) -> TunedChoice:
     """Measure every eligible (backend, knobs) candidate for this workload,
     record the winner (in-memory always; JSON sidecar when ``persist``),
     and return it.  Subsequent ``compile_plan(spec_with_auto, shape)`` calls
     resolve to the winner — in this process and, via the sidecar, in every
     later one.
+
+    A candidate whose spec/shape combination the backend rejects
+    (``ValueError``/``TypeError``/``NotImplementedError`` at plan or trace
+    time) is recorded as skipped, not silently dropped: pass ``report={}``
+    to receive ``report["skipped"]`` as a list of
+    ``{"backend", "knobs", "reason"}`` rows (the CLI prints them).  Any
+    other exception propagates — a crash inside a measurement is a bug, not
+    an ineligible candidate.
     """
     from repro.core import plan as _plan  # late: plan ↔ autotune
 
@@ -267,6 +276,7 @@ def autotune(
     require = tuple(require)
     x = _sample_input(spec, shape)
     measured: list[tuple[float, str, dict]] = []
+    skipped: list[dict] = []
     for name in _backends.available_backends():
         backend = _backends.get_backend(name)
         if not _eligible(backend, spec, require):
@@ -278,16 +288,25 @@ def autotune(
                     cand, shape, features=features, require=require
                 )
                 us = _time_plan(p, x, trials)
-            except Exception as exc:  # invalid knob/shape combo: not a winner
+            except (ValueError, TypeError, NotImplementedError) as exc:
+                # expected rejection: invalid knob/shape combo for THIS
+                # backend (validate(), offset bounds, unsupported dtype)
+                skipped.append(
+                    {"backend": name, "knobs": dict(knobs),
+                     "reason": f"{type(exc).__name__}: {exc}"}
+                )
                 if verbose:
                     print(f"  {name} {knobs}: skipped ({exc})")
                 continue
             if verbose:
                 print(f"  {name} {knobs}: {us:.0f} us")
             measured.append((us, name, knobs))
+    if report is not None:
+        report["skipped"] = skipped
     if not measured:
         raise RuntimeError(
-            f"no eligible backend could serve spec {spec} at shape {shape}"
+            f"no eligible backend could serve spec {spec} at shape {shape}; "
+            f"{len(skipped)} candidate(s) were rejected: {skipped}"
         )
     us, name, knobs = min(measured, key=lambda t: t[0])
     key = tune_key(spec, shape, require)
@@ -329,11 +348,16 @@ def main(argv=None) -> int:
         quantize=args.quantize,
         ndim=len(spatial),
     )
+    report: dict = {}
     choice = autotune(
         spec, shape, trials=args.trials, persist=not args.no_persist,
-        verbose=True,
+        verbose=True, report=report,
     )
     entry = _store()[tune_key(spec, shape)]
+    if report["skipped"]:
+        print(f"skipped {len(report['skipped'])} candidate(s):")
+        for row in report["skipped"]:
+            print(f"  {row['backend']} {row['knobs']}: {row['reason']}")
     print(
         f"winner: {choice.backend} {dict(choice.knobs)} "
         f"({entry['us']:.0f} us) -> {store_path()}"

@@ -54,6 +54,7 @@ __all__ = [
     "get_backend",
     "register",
     "resolve_scheme",
+    "unregister",
 ]
 
 
@@ -179,6 +180,17 @@ def register(backend: Backend) -> Backend:
         )
     _REGISTRY[backend.name] = backend
     return backend
+
+
+def unregister(name: str) -> None:
+    """Remove a registered backend (test-fixture hygiene: scratch backends
+    must not leak into other tests' "auto" resolution or registry sweeps)."""
+    try:
+        del _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheme {name!r}; available: {sorted(_REGISTRY)}"
+        ) from None
 
 
 def get_backend(name: str) -> Backend:

@@ -73,6 +73,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import threading
 from collections.abc import Callable
 
@@ -83,6 +84,7 @@ import numpy as np
 from repro.core import backends as _backends
 from repro.core.haralick import FEATURE_NAMES, haralick_features
 from repro.core.quantize import (
+    is_identity_quantize,
     quantize_equalized,
     quantize_uniform,
     uniform_params,
@@ -120,6 +122,8 @@ class GLCMPlan:
     fused_quantize: bool = False   # quantization is binned inside the count
     host_native: bool = False      # fn runs NumPy counting outside jit
     tuned: object = None           # the autotune.TunedChoice applied, if any
+    lint: tuple | None = None      # analysis.Finding tuple once linted
+    #                                (empty = verified clean; None = unlinted)
 
     def __call__(self, img: jax.Array) -> jax.Array:
         return self.fn(img)
@@ -194,12 +198,37 @@ def _canonical_features(features) -> bool | tuple[str, ...]:
     return names
 
 
+def _lint_enabled_by_env() -> bool:
+    return os.environ.get("REPRO_PLAN_LINT", "").lower() in ("1", "true", "yes")
+
+
+def _ensure_linted(plan: GLCMPlan) -> GLCMPlan:
+    """Lint ``plan`` once, cache the verdict on the entry, raise on findings.
+
+    The verdict rides the cached plan (``plan.lint``), not the cache key: a
+    plan compiled without ``check`` and later requested with
+    ``check="lint"`` is linted lazily on that hit, and every subsequent
+    linted lookup replays the stored verdict for free.
+    """
+    if plan.lint is None:
+        from repro.analysis import jaxpr_lint  # late: analysis imports plan
+
+        findings = tuple(jaxpr_lint.lint_plan(plan))
+        object.__setattr__(plan, "lint", findings)
+    if plan.lint:
+        from repro.analysis import jaxpr_lint
+
+        raise jaxpr_lint.PlanContractError(plan.lint)
+    return plan
+
+
 def compile_plan(
     spec: GLCMSpec,
     shape: tuple[int, ...],
     *,
     features: bool | tuple[str, ...] = False,
     require: tuple[str, ...] = (),
+    check: str | None = None,
 ) -> GLCMPlan:
     """Resolve ``spec`` for input ``shape`` and return the cached GLCMPlan.
 
@@ -213,7 +242,19 @@ def compile_plan(
     (e.g. ``("sharded_partial",)`` from the distributed layer); "auto"
     resolves to a capable backend, and an explicitly named incapable one
     raises.
+
+    ``check="lint"`` additionally abstract-traces the compiled program and
+    runs the plan-contract lint rules (:mod:`repro.analysis`) against it,
+    raising :class:`repro.analysis.PlanContractError` on any finding; the
+    verdict is cached on the plan entry, so repeated linted lookups cost
+    nothing.  Setting ``REPRO_PLAN_LINT=1`` in the environment turns the
+    check on for every ``compile_plan`` call that doesn't pass ``check``
+    explicitly (``check=""`` opts a single call back out).
     """
+    if check is None and _lint_enabled_by_env():
+        check = "lint"
+    if check not in (None, "", "lint"):
+        raise ValueError(f"unknown check mode {check!r}; expected 'lint'")
     shape = tuple(int(s) for s in shape)
     nd = spec.ndim
     if len(shape) not in (nd, nd + 1):
@@ -238,7 +279,8 @@ def compile_plan(
         if plan is not None:
             _CACHE.move_to_end(key)
             _STATS["hits"] += 1
-            return plan
+    if plan is not None:
+        return _ensure_linted(plan) if check == "lint" else plan
 
     if tuned is not None:
         name = tuned.backend
@@ -312,10 +354,20 @@ def compile_plan(
 
     def run(img: jax.Array) -> jax.Array:
         if fused:
-            # The backend sees RAW pixels plus per-image (lo, span); no
-            # quantized full-size intermediate exists in this program.
             stack = img if batched else img[None]
-            qargs = uniform_params(stack, vmin=vmin, vmax=vmax, batched=True)
+            if is_identity_quantize(img.dtype, resolved.levels, vmin, vmax):
+                # Provably-identity quantization (uint8, levels=256, vrange
+                # (0, 255)): the input already holds the level indices, so
+                # the fused affine would be pure wasted arithmetic.  Hand
+                # the backend a plain cast with no quant params — the
+                # traced program stays free of binning floor/div ops
+                # (asserted by the identity-quantize-float-free lint rule).
+                stack = stack.astype(jnp.int32)
+                qargs = None
+            else:
+                # The backend sees RAW pixels plus per-image (lo, span); no
+                # quantized full-size intermediate exists in this program.
+                qargs = uniform_params(stack, vmin=vmin, vmax=vmax, batched=True)
         else:
             if quant is not None:
                 # Per-image quantization: each image of a batch uses its OWN
@@ -348,7 +400,10 @@ def compile_plan(
             x = np.asarray(img)
             if fused:
                 stack = x if batched else x[None]
-                qargs = _native.uniform_params_np(stack, vmin, vmax)
+                if is_identity_quantize(x.dtype, resolved.levels, vmin, vmax):
+                    qargs = None  # identity: values already ARE the levels
+                else:
+                    qargs = _native.uniform_params_np(stack, vmin, vmax)
             else:
                 if quant is not None:
                     arr = jnp.asarray(x)
@@ -378,4 +433,4 @@ def compile_plan(
         while len(_CACHE) > _LIMIT[0]:
             _CACHE.popitem(last=False)
             _STATS["evictions"] += 1
-    return plan
+    return _ensure_linted(plan) if check == "lint" else plan

@@ -157,3 +157,35 @@ def test_tuned_choice_apply():
     choice = autotune.TunedChoice(backend="onehot", knobs=(("copies", 4),))
     spec = choice.apply(SPEC)
     assert spec.scheme == "onehot" and spec.copies == 4
+
+
+def test_autotune_reports_skipped_candidates(sidecar, monkeypatch):
+    """An expected rejection (ValueError at plan/measure time) surfaces in
+    report['skipped'] instead of vanishing; the search still finds a winner
+    among the surviving candidates."""
+    real = autotune._time_plan
+
+    def flaky(plan, x, trials):
+        if plan.backend.name == "scatter":
+            raise ValueError("injected: scatter cannot serve this workload")
+        return real(plan, x, trials)
+
+    monkeypatch.setattr(autotune, "_time_plan", flaky)
+    report: dict = {}
+    choice = autotune.autotune(SPEC, SHAPE, trials=1, report=report)
+    assert choice.backend != "scatter"
+    rejected = [r["backend"] for r in report["skipped"]]
+    assert "scatter" in rejected
+    assert all("injected" in r["reason"] for r in report["skipped"]
+               if r["backend"] == "scatter")
+
+
+def test_autotune_crash_propagates(sidecar, monkeypatch):
+    """A crash that is NOT an expected rejection must escape the search —
+    the old bare ``except Exception`` swallowed genuine bugs as 'skipped'."""
+    def boom(plan, x, trials):
+        raise RuntimeError("injected measurement bug")
+
+    monkeypatch.setattr(autotune, "_time_plan", boom)
+    with pytest.raises(RuntimeError, match="injected measurement bug"):
+        autotune.autotune(SPEC, SHAPE, trials=1, persist=False)

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import int_image_eqns
 from repro.core.plan import compile_plan
 from repro.core.quantize import quantize_uniform
 from repro.core.schemes import VOLUME_PAIRS
@@ -20,35 +21,6 @@ def _raw_stack(rng, shape):
     # Raw float pixels with per-image dynamic range (no pinned vrange): the
     # hardest case — (lo, span) must be derived per image inside the plan.
     return jnp.asarray(rng.random(shape, np.float32) * 200.0 - 30.0)
-
-
-def _int_spatial_eqns(jaxpr, spatial):
-    """Every equation output that is an integer array covering the full
-    spatial extent — what a materialized quantized image would look like."""
-    bad = []
-
-    def walk(jx):
-        for eqn in jx.eqns:
-            for v in eqn.outvars:
-                aval = getattr(v, "aval", None)
-                if aval is None or not hasattr(aval, "shape"):
-                    continue
-                if (
-                    np.issubdtype(aval.dtype, np.integer)
-                    and len(aval.shape) >= len(spatial)
-                    and tuple(aval.shape[-len(spatial):]) == spatial
-                ):
-                    bad.append((eqn.primitive.name, aval.shape, str(aval.dtype)))
-            for sub in eqn.params.values():
-                if hasattr(sub, "jaxpr"):
-                    walk(sub.jaxpr)
-                elif isinstance(sub, (list, tuple)):
-                    for s in sub:
-                        if hasattr(s, "jaxpr"):
-                            walk(s.jaxpr)
-
-    walk(jaxpr)
-    return bad
 
 
 @pytest.mark.parametrize("scheme", FUSED_2D)
@@ -125,7 +97,7 @@ def test_fused_plan_never_materializes_quantized_image(scheme):
     plan = compile_plan(spec, img.shape)
     assert plan.fused_quantize
     jx = jax.make_jaxpr(plan.fn)(img)
-    assert _int_spatial_eqns(jx.jaxpr, spatial) == []
+    assert int_image_eqns(jx, spatial) == []
 
 
 def test_fused_volume_plan_never_materializes_quantized_volume():
@@ -138,7 +110,7 @@ def test_fused_volume_plan_never_materializes_quantized_volume():
     plan = compile_plan(spec, vol.shape)
     assert plan.fused_quantize
     jx = jax.make_jaxpr(plan.fn)(vol)
-    assert _int_spatial_eqns(jx.jaxpr, spatial) == []
+    assert int_image_eqns(jx, spatial) == []
 
 
 def test_prequantize_plan_does_materialize():
@@ -153,7 +125,7 @@ def test_prequantize_plan_does_materialize():
     plan = compile_plan(spec, img.shape)
     assert not plan.fused_quantize
     jx = jax.make_jaxpr(plan.fn)(img)
-    assert _int_spatial_eqns(jx.jaxpr, spatial)
+    assert int_image_eqns(jx, spatial)
 
 
 def test_equalized_stays_prequantized():

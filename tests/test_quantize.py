@@ -79,12 +79,20 @@ def test_identity_quantize_bit_exact():
 def test_identity_quantize_elides_float_ops():
     """Structural check: the short-circuited program contains no float
     arithmetic — it is a cast, nothing more."""
+    from repro.analysis import primitive_names
+
     img = jnp.zeros((8, 8), jnp.uint8)
     jx = jax.make_jaxpr(
         lambda x: quantize_uniform(x, 256, vmin=0, vmax=255)
     )(img)
-    prims = {eqn.primitive.name for eqn in jx.jaxpr.eqns}
+    prims = primitive_names(jx)
     assert "floor" not in prims and "div" not in prims
+    # positive control: a NON-identity binning really does floor/divide —
+    # otherwise the absence above would be vacuous
+    dirty = jax.make_jaxpr(
+        lambda x: quantize_uniform(x, 200, vmin=0, vmax=255)
+    )(img)
+    assert {"floor", "div"} <= primitive_names(dirty)
 
 
 # ---------------------------------------------------------------------------
