@@ -21,6 +21,16 @@ in B (compute dominates and is serial); the historical sub-1.0 regressions
 (scatter B4 = 0.905, blocked B2 = 0.767 in the committed baseline) came
 from vmap re-dispatching per-image scatter/scan programs B times, fixed by
 the flat batched scatter and the batch-inside-scan blocked rewrite.
+
+The Pallas batch-grid rows degrade past B≈4 here (pallas B8 = 0.598,
+pallas_fused B8 = 0.616 in the committed baseline): in interpret mode
+every grid step pays a fixed Python dispatch overhead, and a grid of
+(B, steps) multiplies that overhead by B while the per-step compute stays
+serial — a launch-topology cost, not a kernel cost. The
+``batch_mode="unroll"`` spec knob routes the same kernel as B unit-batch
+calls inside one jitted program instead; the ``*_unroll`` variants below
+track that path, and the autotuner measures both topologies so
+``scheme="auto"`` never lands on the degrading one.
 """
 
 import numpy as np
@@ -33,7 +43,19 @@ from repro.core.spec import GLCMSpec
 SIZE = 128          # per-image resolution (kept small: CPU CI budget)
 LEVELS = 16
 BATCH_SIZES = (1, 2, 4, 8)
-SCHEMES = ("scatter", "onehot", "blocked", "native", "pallas", "pallas_fused")
+# label → spec overrides; labels key the emitted rows (and so the committed
+# speedup baselines), so the batch-grid rows keep their historical names.
+VARIANTS = (
+    ("scatter", {"scheme": "scatter"}),
+    ("onehot", {"scheme": "onehot"}),
+    ("blocked", {"scheme": "blocked"}),
+    ("native", {"scheme": "native"}),
+    ("pallas", {"scheme": "pallas"}),
+    ("pallas_fused", {"scheme": "pallas_fused"}),
+    ("pallas_unroll", {"scheme": "pallas", "batch_mode": "unroll"}),
+    ("pallas_fused_unroll",
+     {"scheme": "pallas_fused", "batch_mode": "unroll"}),
+)
 
 
 def run() -> None:
@@ -41,21 +63,21 @@ def run() -> None:
     imgs = jnp.asarray(
         rng.integers(0, LEVELS, size=(max(BATCH_SIZES), SIZE, SIZE)), jnp.int32
     )
-    for scheme in SCHEMES:
+    for label, overrides in VARIANTS:
         base_ips = None
         for b in BATCH_SIZES:
             stack = imgs[:b]
-            spec = GLCMSpec(levels=LEVELS, pairs=((1, 0),), scheme=scheme)
+            spec = GLCMSpec(levels=LEVELS, pairs=((1, 0),), **overrides)
             plan = compile_plan(spec, stack.shape)
             us = time_fn(plan, stack)
             ips = b / (us * 1e-6)
             if base_ips is None:
                 base_ips = ips
             emit(
-                f"batch_throughput/{scheme}/B{b}",
+                f"batch_throughput/{label}/B{b}",
                 us,
                 f"images_per_sec={ips:.1f}_x{ips / base_ips:.2f}",
-                scheme=scheme,
+                scheme=label,
                 batch=b,
                 resolution=SIZE,
                 images_per_sec=round(ips, 1),

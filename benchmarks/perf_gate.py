@@ -18,6 +18,9 @@ file is recorded, not gated — the ratchet only tightens):
     headline, best accelerated path vs the serial scatter loop.
   * ``speedups.batch_vs_b1`` (per scheme × batch) — dispatch-amortization
     curve of the serving path.
+  * ``speedups.stream_incremental_vs_recompute`` (per window × mode) — the
+    temporal serving headline, incremental rolling-window update vs full
+    window recompute.
 
 A fresh ratio may undershoot the committed one by up to ``--noise``
 (default 35% — single-core CI hosts jitter; the committed numbers are from
@@ -47,7 +50,9 @@ def gate(
     committed: dict, fresh: dict, noise: float
 ) -> tuple[list[str], list[str]]:
     """Compare gated ratio metrics; returns (regressions, report_lines)."""
-    gated_sections = ("vs_serial_cpu", "batch_vs_b1")
+    gated_sections = (
+        "vs_serial_cpu", "batch_vs_b1", "stream_incremental_vs_recompute"
+    )
     regressions: list[str] = []
     report: list[str] = []
     for section in gated_sections:
@@ -82,7 +87,7 @@ def _fresh_run(out_path: str) -> dict:
     from benchmarks import common, run as runner
 
     common.reset_results()
-    for mod_name in ("fig5_speedup", "batch_throughput"):
+    for mod_name in ("fig5_speedup", "batch_throughput", "stream_throughput"):
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
         print(f"# perf_gate: running {mod_name}", file=sys.stderr)
         mod.run()
@@ -93,6 +98,9 @@ def _fresh_run(out_path: str) -> dict:
                 common.RESULTS
             ),
             "batch_vs_b1": runner._batch_speedups(common.RESULTS),
+            "stream_incremental_vs_recompute": runner._stream_speedups(
+                common.RESULTS
+            ),
         },
         "rows": common.RESULTS,
     }

@@ -22,7 +22,7 @@ from repro.core.plan import plan_cache_stats
 
 MODULES = ("table2_scheme1", "table3_scheme2", "table4_transfer",
            "fig4_async", "fig5_speedup", "moe_dispatch", "batch_throughput",
-           "texture_map", "volume_throughput")
+           "texture_map", "volume_throughput", "stream_throughput")
 
 
 def _batch_speedups(rows: list[dict]) -> dict:
@@ -70,6 +70,17 @@ def _volume_speedups(rows: list[dict]) -> dict:
                 "voxels_per_sec"
             ]
     return out
+
+
+def _stream_speedups(rows: list[dict]) -> dict:
+    """window/mode → incremental-vs-full-recompute speedup from
+    stream_throughput's rows (the temporal serving headline the perf gate
+    ratchets)."""
+    return {
+        f"window{r['window']}/{r['mode']}": round(r["speedup_vs_recompute"], 3)
+        for r in rows
+        if "speedup_vs_recompute" in r
+    }
 
 
 def _texture_map_speedups(rows: list[dict]) -> dict:
@@ -145,6 +156,9 @@ def main() -> None:
                 ),
                 "texture_map_vs_loop": _texture_map_speedups(common.RESULTS),
                 "volume_throughput": _volume_speedups(common.RESULTS),
+                "stream_incremental_vs_recompute": _stream_speedups(
+                    common.RESULTS
+                ),
             },
             "rows": common.RESULTS,
         }

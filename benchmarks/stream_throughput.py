@@ -1,0 +1,115 @@
+"""Incremental rolling-window GLCM vs full recompute — per-frame latency.
+
+The temporal serving question: a live consumer wants the co-occurrence
+matrix (or Haralick features) of the last ``window`` frames after EVERY
+frame.  The naive path recomputes the whole window per step (``window``
+per-frame counting passes, batched); the incremental path
+(``compile_plan(..., temporal_window=w)`` — see ``core.stream_state``)
+computes ONE per-frame delta and updates the window by integer
+add/subtract, bit-identical by construction.  The ratio is the headline
+``speedups.stream_incremental_vs_recompute`` section of BENCH_glcm.json
+(ratcheted by ``benchmarks.perf_gate``) and should grow roughly linearly
+with the window size.
+
+Incremental per-step cost is measured as a live consumer sees it: state
+threaded through an online loop, blocking on every step's output.  The
+recompute baseline is one jitted batched counting pass over the (w, H, W)
+window stack summed over frames (its per-frame work amortizes batch
+dispatch, so the baseline is the STRONG form of naive recompute).  The
+features row additionally pays the Haralick tail on both sides.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, plan_row_fields, time_fn
+from repro.core.plan import compile_plan
+from repro.core.spec import GLCMSpec
+
+SIZE = 256          # per-frame resolution (kept small: CPU CI budget)
+LEVELS = 16
+PAIRS = ((1, 0), (1, 45))
+SCHEME = "onehot"   # the CPU-fast device scheme; one scheme keeps CI cheap
+WINDOWS = (2, 8, 16)
+TIMED_FRAMES = 6    # online steps measured per window size
+
+
+def _stream_step_us(plan, frames) -> float:
+    """Median per-frame latency of the online incremental loop (state
+    threaded across steps, blocking on each output)."""
+    state = plan.init_state()
+    out = None
+    for f in frames[: plan.window + 2]:  # compile + fill the ring
+        state, out = plan.update(state, f)
+    jax.block_until_ready(out)
+    times = []
+    for f in frames[plan.window + 2:]:
+        t0 = time.perf_counter()
+        state, out = plan.update(state, f)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    n_frames = max(WINDOWS) + 2 + TIMED_FRAMES
+    video = jnp.asarray(
+        rng.integers(0, LEVELS, size=(n_frames, SIZE, SIZE)), jnp.int32
+    )
+    spec = GLCMSpec(levels=LEVELS, pairs=PAIRS, scheme=SCHEME)
+
+    for w in WINDOWS:
+        plan = compile_plan(spec, (SIZE, SIZE), temporal_window=w)
+        inc_us = _stream_step_us(plan, list(video))
+
+        # The naive per-step cost: recompute the window's GLCM from its w
+        # frames (one batched counting pass + frame-sum), jitted as one
+        # program.
+        batch_plan = compile_plan(spec, (w, SIZE, SIZE))
+        recompute = jax.jit(lambda s, _p=batch_plan: _p.fn(s).sum(axis=0))
+        window_stack = video[:w]
+        rec_us = time_fn(recompute, window_stack)
+
+        # Exactness spot-check: the incremental path must be bit-identical
+        # to the recompute of the same window (the tests sweep this fully).
+        rolled = plan.rolling(video[:w])[-1]
+        np.testing.assert_array_equal(
+            np.asarray(rolled), np.asarray(recompute(window_stack))
+        )
+
+        emit(
+            f"stream_throughput/counts/window{w}",
+            inc_us,
+            f"recompute={rec_us:.0f}us_speedup={rec_us / inc_us:.2f}x",
+            window=w,
+            scheme=SCHEME,
+            resolution=SIZE,
+            mode="counts",
+            recompute_us=round(rec_us, 1),
+            speedup_vs_recompute=rec_us / inc_us,
+            **plan_row_fields(plan),
+        )
+
+    # One features row: both sides additionally pay the Haralick tail per
+    # step (the tail is window-size-independent, so the ratio compresses).
+    w = 8
+    fspec = spec.replace(normalize=True)
+    fplan = compile_plan(fspec, (SIZE, SIZE), features=True, temporal_window=w)
+    inc_us = _stream_step_us(fplan, list(video))
+    rec_us = time_fn(lambda v, _p=fplan: _p.rolling(v)[-1], video[:w])
+    emit(
+        f"stream_throughput/features/window{w}",
+        inc_us,
+        f"recompute={rec_us:.0f}us_speedup={rec_us / inc_us:.2f}x",
+        window=w,
+        scheme=SCHEME,
+        resolution=SIZE,
+        mode="features",
+        recompute_us=round(rec_us, 1),
+        speedup_vs_recompute=rec_us / inc_us,
+        **plan_row_fields(fplan),
+    )

@@ -1,0 +1,66 @@
+"""Rolling-window texture features over a video stream, incrementally.
+
+    PYTHONPATH=src python examples/video_stream.py
+
+A synthetic video (a smooth texture panning 3 px/frame, hard-cutting to
+iid noise midway) is consumed frame by frame through an incremental
+temporal GLCM plan (``compile_plan(..., temporal_window=w)``): each step
+computes ONE per-frame co-occurrence delta and updates the exact rolling
+w-frame window by integer add/subtract — bit-identical to recomputing the
+whole window, at ~1/w the work (see ``repro.core.stream_state``).
+
+Prints the per-frame contrast/entropy trace: both hold steady over the
+smooth scene, spike at the scene change, and plateau at the noise regime's
+level once the window has fully turned over — the texture-monitoring
+pattern (defect detection, scene segmentation) this mode exists for.
+"""
+
+import numpy as np
+
+from repro.core.haralick import FEATURE_NAMES
+from repro.core.pipeline import glcm_feature_stream
+from repro.core.spec import GLCMSpec
+from repro.data.images import texture_video
+
+FRAMES = 24
+CHANGE_AT = 12
+WINDOW = 6
+SIZE = 256
+
+
+def main() -> None:
+    video = texture_video(SIZE, FRAMES, shift=3, change_at=CHANGE_AT)
+    spec = GLCMSpec(
+        levels=16,
+        pairs=((1, 0), (1, 45), (1, 90), (1, 135)),
+        quantize="uniform",
+        vrange=(0, 255),
+        normalize=True,
+    )
+
+    print(f"{FRAMES} frames @ {SIZE}², rolling window of {WINDOW} "
+          f"(scene change at frame {CHANGE_AT}):")
+    print(f"{'frame':>5}  {'contrast':>10}  {'entropy':>8}")
+    trace = []
+    stream = glcm_feature_stream(
+        (f.astype(np.float32) for f in video), spec=spec,
+        temporal_window=WINDOW,
+    )
+    i_con = FEATURE_NAMES.index("contrast")
+    i_ent = FEATURE_NAMES.index("entropy")
+    for t, feats in enumerate(stream):
+        feats = np.asarray(feats)  # (n_pairs, 14)
+        contrast = float(feats[:, i_con].mean())  # offset-averaged
+        entropy = float(feats[:, i_ent].mean())
+        trace.append((contrast, entropy))
+        marker = "  <- scene change enters window" if t == CHANGE_AT else ""
+        print(f"{t:>5}  {contrast:>10.1f}  {entropy:>8.3f}{marker}")
+
+    before = np.mean([c for c, _ in trace[WINDOW:CHANGE_AT]])
+    after = np.mean([c for c, _ in trace[CHANGE_AT + WINDOW:]])
+    print(f"\nmean contrast: smooth scene {before:.1f} -> noise scene "
+          f"{after:.1f} ({after / before:.0f}x jump at the cut)")
+
+
+if __name__ == "__main__":
+    main()

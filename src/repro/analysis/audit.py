@@ -1,8 +1,8 @@
 """Registry audit: abstract-trace every backend and lint its contracts.
 
 ``python -m repro.analysis.audit`` sweeps every registered backend across a
-representative spec matrix (2-D / tiles / window / volume × quantize modes
-× accum modes × feature selections), abstract-traces each resulting plan
+representative spec matrix (2-D / tiles / window / volume / temporal
+stream × quantize modes × accum modes × feature selections), abstract-traces each resulting plan
 (``jax.make_jaxpr`` — no execution, so the audit runs anywhere in seconds,
 Pallas kernels included), and lints the traced program against the rules
 the contract layer says the backend's declared ``Capabilities`` and the
@@ -48,6 +48,7 @@ class AuditCase:
     shape: tuple[int, ...]
     dtype: object = jnp.int32
     features: bool | tuple[str, ...] = False
+    temporal_window: int | None = None  # stream cases: unbatched frame shape
 
 
 def audit_cases() -> tuple[AuditCase, ...]:
@@ -125,6 +126,21 @@ def audit_cases() -> tuple[AuditCase, ...]:
             GLCMSpec(levels=8, pairs=((1, 0),), normalize=True),
             (24, 20),
             features=True,
+        ),
+        # -- incremental temporal streams ---------------------------------
+        AuditCase(
+            "stream/fused-uniform",
+            GLCMSpec(levels=16, pairs=pairs2, quantize="uniform"),
+            (40, 36),
+            dtype=jnp.float32,
+            temporal_window=8,
+        ),
+        AuditCase(
+            "stream/tiles/int-accum",
+            GLCMSpec(levels=8, pairs=((1, 0), (1, 135)), region="tiles",
+                     region_shape=16, accum="int"),
+            (32, 32),
+            temporal_window=4,
         ),
         # -- volumetric ----------------------------------------------------
         AuditCase(
@@ -208,7 +224,8 @@ def run_audit(
                 continue
             spec = case.spec.replace(scheme=name)
             try:
-                plan = compile_plan(spec, case.shape, features=case.features)
+                plan = compile_plan(spec, case.shape, features=case.features,
+                                    temporal_window=case.temporal_window)
                 findings = jaxpr_lint.lint_plan(plan, dtype=case.dtype)
             except ValueError as exc:
                 # Plan-time rejection (shape/capability validation) is the
@@ -240,6 +257,7 @@ def _rules_run(plan, case: AuditCase) -> tuple[str, ...]:
         jaxpr=None, spec=plan.spec, backend=plan.backend, shape=plan.shape,
         dtype=jnp.dtype(case.dtype), features=plan.features,
         fused_quantize=plan.fused_quantize, host_native=plan.host_native,
+        temporal_window=case.temporal_window,
     )
     return contracts.applicable_rules(ctx)
 

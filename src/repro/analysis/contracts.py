@@ -97,6 +97,8 @@ SPEC_RULES: dict[str, str] = {
     "accum='int' exact integer accumulation": "accum-exact-width",
     "select= prunes the O(L^3) eigendecomposition": "pruned-no-eigh",
     "float32/int32 dtype contract": "no-f64-promotion",
+    "temporal stream state accumulates in signed integers":
+        "stream-signed-accum",
 }
 
 
@@ -159,5 +161,10 @@ def applicable_rules(ctx: LintContext) -> tuple[str, ...]:
     if not _selects_mcc(ctx.features):
         rules.append("pruned-no-eigh")
     rules.append("no-f64-promotion")
+    if ctx.temporal_window is not None:
+        # Incremental temporal plans: the rolling expiry subtraction must
+        # never run in the unsigned widths that are fine for single-frame
+        # voting (transient underflow would wrap, corrupting every window).
+        rules.append("stream-signed-accum")
 
     return tuple(rules)

@@ -52,6 +52,7 @@ __all__ = [
     "get_rule",
     "has_primitive",
     "int_image_eqns",
+    "is_stream_plan",
     "lint_plan",
     "primitive_names",
     "register_rule",
@@ -189,7 +190,12 @@ class LintContext:
     abstractly (for host-native plans this is the jittable ``pure_callback``
     fallback — the only traced form such a plan has).  ``features`` is the
     plan's canonical features argument (False, True, or a name tuple).
-    """
+
+    For incremental temporal plans (``GLCMStreamPlan``) ``jaxpr`` is the
+    traced ``update(state, frame)`` step, ``temporal_window`` the rolling
+    window length, and ``state_avals`` the carried state's abstract values
+    (counts, ring, pos, seen) — what the ``stream-signed-accum`` rule
+    audits."""
 
     jaxpr: object
     spec: object
@@ -199,6 +205,8 @@ class LintContext:
     features: bool | tuple[str, ...] = False
     fused_quantize: bool = False
     host_native: bool = False
+    temporal_window: int | None = None
+    state_avals: tuple = ()
 
     @property
     def spatial(self) -> tuple[int, ...]:
@@ -476,6 +484,61 @@ register_rule(Rule(
 ))
 
 
+def _check_stream_signed_accum(ctx: LintContext) -> list[str]:
+    out = []
+    # (a) The carried state itself: every integer leaf (counts, ring) must
+    # be a signed dtype — the expiry subtraction transiently dips below the
+    # arriving delta, and unsigned arithmetic wraps instead of borrowing.
+    for aval in ctx.state_avals:
+        dtype = getattr(aval, "dtype", None)
+        if dtype is not None and np.issubdtype(dtype, np.unsignedinteger):
+            out.append(
+                f"stream state carries unsigned {dtype} "
+                f"{tuple(getattr(aval, 'shape', ()))} — the expiry "
+                "subtraction can transiently underflow; rolling accumulators "
+                "must be signed (int32)"
+            )
+    # (b) The traced update step: no count-shaped (…, L, L) subtraction may
+    # produce an unsigned dtype.  Only ``sub`` is probed: per-frame delta
+    # *voting* legitimately adds in uint16 (accum='int' backends), but
+    # single-frame counting never subtracts — any count-shaped unsigned
+    # subtraction is the rolling expiry running in a wrapping dtype (and an
+    # all-unsigned accumulator is caught here through its own expiry sub,
+    # or by (a) via the carried state).
+    levels = ctx.levels
+    for eqn in walk_eqns(ctx.jaxpr):
+        if eqn.primitive.name != "sub" or not eqn.outvars:
+            continue
+        aval = getattr(eqn.outvars[0], "aval", None)
+        if aval is None or not hasattr(aval, "dtype"):
+            continue
+        shape = tuple(getattr(aval, "shape", ()))
+        if (
+            len(shape) >= 2
+            and shape[-2:] == (levels, levels)
+            and np.issubdtype(aval.dtype, np.unsignedinteger)
+        ):
+            out.append(
+                f"rolling-window {eqn.primitive.name!r} accumulates counts "
+                f"in unsigned {aval.dtype} (shape {shape}) — incremental "
+                "plans must accumulate in signed integer dtypes"
+            )
+    return out
+
+
+register_rule(Rule(
+    name="stream-signed-accum",
+    description=(
+        "An incremental temporal plan must accumulate its rolling-window "
+        "counts in SIGNED integer dtypes: the expiry subtraction can "
+        "transiently underflow the uint16 auto-width chosen for "
+        "single-frame counts, and unsigned wraparound silently corrupts "
+        "every subsequent window."
+    ),
+    check=_check_stream_signed_accum,
+))
+
+
 # ---------------------------------------------------------------------------
 # Plan entry point
 # ---------------------------------------------------------------------------
@@ -488,11 +551,25 @@ def default_input_dtype(spec) -> object:
     return jnp.float32 if spec.quantize is not None else jnp.int32
 
 
+def is_stream_plan(plan) -> bool:
+    """Whether ``plan`` is an incremental temporal plan (``GLCMStreamPlan``):
+    it carries a rolling ``window`` and an explicit ``update_fn`` step
+    instead of a one-shot ``fn``."""
+    return getattr(plan, "window", None) is not None and hasattr(
+        plan, "update_fn"
+    )
+
+
 def trace_plan(plan, dtype=None):
     """Abstract-trace a compiled plan — ``jax.make_jaxpr`` on a
-    ``ShapeDtypeStruct``; no input is materialized and nothing executes."""
+    ``ShapeDtypeStruct``; no input is materialized and nothing executes.
+
+    For stream plans the traced program is one ``update(state, frame)``
+    step — the exact body ``lax.scan`` carries and online stepping jits."""
     dtype = default_input_dtype(plan.spec) if dtype is None else dtype
     arg = jax.ShapeDtypeStruct(plan.shape, dtype)
+    if is_stream_plan(plan):
+        return jax.make_jaxpr(plan.update_fn)(plan.state_struct(), arg)
     return jax.make_jaxpr(plan.fn)(arg)
 
 
@@ -510,6 +587,7 @@ def lint_plan(plan, *, dtype=None, rules: Iterable[str] | None = None):
     dtype = default_input_dtype(plan.spec) if dtype is None else dtype
     dtype = jnp.dtype(dtype)
     jaxpr = trace_plan(plan, dtype)
+    stream = is_stream_plan(plan)
     ctx = LintContext(
         jaxpr=jaxpr,
         spec=plan.spec,
@@ -519,6 +597,11 @@ def lint_plan(plan, *, dtype=None, rules: Iterable[str] | None = None):
         features=plan.features,
         fused_quantize=plan.fused_quantize,
         host_native=plan.host_native,
+        temporal_window=plan.window if stream else None,
+        state_avals=(
+            tuple(jax.tree_util.tree_leaves(plan.state_struct()))
+            if stream else ()
+        ),
     )
     if rules is None:
         names = contracts.applicable_rules(ctx)

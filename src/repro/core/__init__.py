@@ -21,6 +21,9 @@ Modules:
               compute resolved through the plan layer)
   pipeline    host-side streamed, double-buffered processing (CUDA streams
               analogue)
+  stream_state incremental temporal GLCM: exact rolling-window state
+              (GLCMStreamState) + the compiled stream plan compile_plan
+              returns for temporal_window= workloads
 """
 
 from repro.core import (
@@ -32,10 +35,12 @@ from repro.core import (
     quantize,
     schemes,
     spec,
+    stream_state,
 )
 from repro.core.glcm import PAPER_PAIRS, VOLUME_PAIRS, glcm, glcm_features
 from repro.core.plan import compile_plan
 from repro.core.spec import GLCMSpec
+from repro.core.stream_state import GLCMStreamState
 
 __all__ = [
     "glcm",
@@ -52,4 +57,6 @@ __all__ = [
     "quantize",
     "distributed",
     "pipeline",
+    "stream_state",
+    "GLCMStreamState",
 ]

@@ -10,8 +10,9 @@ consults the store whenever it resolves ``scheme="auto"``.
 
 Search space (per backend): ``copies`` (the paper's R) for the one-hot
 scheme, ``num_blocks`` for the blocked scheme, and the Pallas kernels'
-slab/block shapes (``chunk``, ``tile_h``, ``slab_d``) — all spec fields, so
-a winner is just a partial spec update.
+slab/block shapes (``chunk``, ``tile_h``, ``slab_d``) plus their batch
+launch topology (``batch_mode``: batch-on-the-grid vs per-image unroll) —
+all spec fields, so a winner is just a partial spec update.
 
 Persistence is two-layer, mirroring the plan cache's role: a process-local
 dict (consulted on every ``compile_plan``; no I/O on the hot path) loaded
@@ -67,6 +68,7 @@ KNOB_DEFAULTS = {
     "tile_h": None,
     "chunk": None,
     "slab_d": None,
+    "batch_mode": "auto",
 }
 
 _LOCK = threading.Lock()
@@ -210,16 +212,31 @@ def _candidates(
             if n0 % nb == 0 and halo <= n0 // nb
         ]
         return out or [{}]
+    # Pallas kernels additionally expose the batch launch topology: the
+    # default batch-on-the-grid layout degrades past B≈4 on some targets
+    # (per-grid-step overhead scales with batch extent), so every batched
+    # workload also measures batch_mode="unroll" — scheme="auto" can then
+    # never land on a batch-degrading path the tuner has seen beaten.
+    batched = len(shape) == spec.ndim + 1 and shape[0] > 1
     if name == "pallas":
-        return [
+        grid = [
             {"chunk": c, "copies": r}
             for c in (1024, 2048, 4096)
             for r in (1, 4)
         ]
+        if batched:
+            grid += [{**k, "batch_mode": "unroll"} for k in grid]
+        return grid
     if name == "pallas_fused":
-        return [{"tile_h": t} for t in (8, 16, 32)]
+        grid = [{"tile_h": t} for t in (8, 16, 32)]
+        if batched:
+            grid += [{**k, "batch_mode": "unroll"} for k in grid]
+        return grid
     if name == "pallas_volume":
-        return [{"slab_d": s} for s in (8, 16)]
+        grid = [{"slab_d": s} for s in (8, 16)]
+        if batched:
+            grid += [{**k, "batch_mode": "unroll"} for k in grid]
+        return grid
     return [{}]
 
 

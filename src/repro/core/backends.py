@@ -316,6 +316,45 @@ def _blocked_validate(spec: GLCMSpec, shape: tuple[int, ...]) -> None:
             )
 
 
+def _quant_slice(quant, i: int):
+    """Per-image quant params for one element of an unrolled batch: static
+    scalars pass through; per-image (B,) arrays are sliced to length-1."""
+    if quant is None:
+        return None
+    lo = jnp.asarray(quant[0], jnp.float32)
+    span = jnp.asarray(quant[1], jnp.float32)
+    if lo.ndim == 0:
+        return (lo, span)
+    return (lo[i : i + 1], span[i : i + 1])
+
+
+def _unroll_batch(compute):
+    """Wrap a Pallas backend compute with the ``spec.batch_mode`` dispatch.
+
+    "grid" (and "auto", today's default) keeps the one-launch batch-grid
+    path — the TPU serving topology.  "unroll" emits one single-image kernel
+    call per batch element inside the same jitted program: under CPU
+    interpret mode the batched grid's per-step interpretation overhead grows
+    superlinearly with the batch extent (the committed ``batch_vs_b1``
+    regression: pallas B8 at 0.598×), and B independent unit-batch launches
+    restore per-image parity.  The autotuner measures both and persists the
+    winner per (spec, shape, device) — see ``core.autotune``.
+    """
+
+    def dispatch(img: jax.Array, spec: GLCMSpec, quant=None) -> jax.Array:
+        if spec.batch_mode != "unroll" or img.shape[0] <= 1:
+            return compute(img, spec, quant=quant)
+        return jnp.concatenate(
+            [
+                compute(img[i : i + 1], spec, quant=_quant_slice(quant, i))
+                for i in range(img.shape[0])
+            ],
+            axis=0,
+        )
+
+    return dispatch
+
+
 def _pallas_compute(img: jax.Array, spec: GLCMSpec, quant=None) -> jax.Array:
     chunk = spec.chunk if spec.chunk is not None else kops.DEFAULT_CHUNK
     return jnp.stack(
@@ -435,7 +474,7 @@ register(
 register(
     Backend(
         name="pallas",
-        compute=_pallas_compute,
+        compute=_unroll_batch(_pallas_compute),
         caps=Capabilities(
             batch_grid=True, tpu_only=True, volumetric=True,
             fused_quantize=True,
@@ -445,7 +484,7 @@ register(
 register(
     Backend(
         name="pallas_fused",
-        compute=_pallas_fused_compute,
+        compute=_unroll_batch(_pallas_fused_compute),
         caps=Capabilities(
             multi_offset_fused=True, batch_grid=True, tpu_only=True,
             region_grid=True, fused_quantize=True,
@@ -456,7 +495,7 @@ register(
 register(
     Backend(
         name="pallas_volume",
-        compute=_pallas_volume_compute,
+        compute=_unroll_batch(_pallas_volume_compute),
         caps=Capabilities(
             multi_offset_fused=True, batch_grid=True, tpu_only=True,
             volumetric=True, volume_only=True, fused_quantize=True,

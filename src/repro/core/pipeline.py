@@ -122,6 +122,7 @@ def glcm_feature_stream(
     spec: GLCMSpec | None = None,
     prefetch: int = 2,
     batch_size: int = 1,
+    temporal_window: int | None = None,
     vmin: float | None | object = _UNSET,
     vmax: float | None | object = _UNSET,
 ) -> Iterator[jax.Array]:
@@ -143,7 +144,15 @@ def glcm_feature_stream(
     transfer/compute overlap and batching protocol.  A volumetric spec
     (``spec.ndim == 3``) streams (D, H, W) volumes the same way —
     ``batch_size > 1`` coalesces them into (batch_size, D, H, W) stacks,
-    one device dispatch (one depth-slab kernel launch on TPU) per stack."""
+    one device dispatch (one depth-slab kernel launch on TPU) per stack.
+
+    ``temporal_window=w`` switches to the INCREMENTAL temporal mode: the
+    input iterable is one ordered video stream of frames, and each yielded
+    tensor is the Haralick features of the exact rolling w-frame window
+    ending at that frame (one per-frame delta compute per step instead of
+    w — see ``core.stream_state``).  The stream is stateful and ordered, so
+    ``batch_size`` must stay 1; transfer/compute overlap still applies
+    (frame k+1's H2D runs while window k's update is in flight)."""
     if spec is None:
         if levels is None:
             raise ValueError("pass either spec= or levels")
@@ -160,6 +169,37 @@ def glcm_feature_stream(
             "pass either spec= or the legacy levels/pairs/vmin/vmax keywords, "
             "not both"
         )
+
+    if temporal_window is not None:
+        if batch_size != 1:
+            raise ValueError(
+                "temporal_window streams are stateful and ordered; "
+                "batch_size must be 1"
+            )
+
+        def temporal() -> Iterator[jax.Array]:
+            device = jax.devices()[0]
+            plan = state = None
+            queue: collections.deque = collections.deque()
+            for host in images:
+                dev = jax.device_put(np.asarray(host), device)
+                if plan is None:
+                    plan = compile_plan(
+                        spec, dev.shape, features=True,
+                        temporal_window=temporal_window,
+                    )
+                    state = plan.init_state()
+                # update() dispatches asynchronously: frame k+1's H2D (the
+                # device_put above, next iteration) overlaps this window's
+                # compute; we block only on the oldest queued output.
+                state, out = plan.update(state, dev)
+                queue.append(out)
+                if len(queue) >= max(prefetch, 1):
+                    yield jax.block_until_ready(queue.popleft())
+            while queue:
+                yield jax.block_until_ready(queue.popleft())
+
+        return temporal()
 
     def fn(img):
         # One cached plan per incoming shape (the plan cache is shared with

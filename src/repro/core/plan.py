@@ -90,9 +90,11 @@ from repro.core.quantize import (
     uniform_params,
 )
 from repro.core.spec import GLCMSpec
+from repro.core.stream_state import GLCMStreamPlan
 
 __all__ = [
     "GLCMPlan",
+    "GLCMStreamPlan",
     "compile_plan",
     "plan_cache_clear",
     "plan_cache_limit",
@@ -202,6 +204,19 @@ def _lint_enabled_by_env() -> bool:
     return os.environ.get("REPRO_PLAN_LINT", "").lower() in ("1", "true", "yes")
 
 
+def _cache_put(key, plan):
+    """Insert ``plan`` under ``key`` (first writer wins) and enforce the LRU
+    bound; returns the cached instance."""
+    with _LOCK:
+        plan = _CACHE.setdefault(key, plan)
+        _CACHE.move_to_end(key)
+        _STATS["misses"] += 1
+        while len(_CACHE) > _LIMIT[0]:
+            _CACHE.popitem(last=False)
+            _STATS["evictions"] += 1
+    return plan
+
+
 def _ensure_linted(plan: GLCMPlan) -> GLCMPlan:
     """Lint ``plan`` once, cache the verdict on the entry, raise on findings.
 
@@ -229,6 +244,7 @@ def compile_plan(
     features: bool | tuple[str, ...] = False,
     require: tuple[str, ...] = (),
     check: str | None = None,
+    temporal_window: int | None = None,
 ) -> GLCMPlan:
     """Resolve ``spec`` for input ``shape`` and return the cached GLCMPlan.
 
@@ -250,6 +266,18 @@ def compile_plan(
     nothing.  Setting ``REPRO_PLAN_LINT=1`` in the environment turns the
     check on for every ``compile_plan`` call that doesn't pass ``check``
     explicitly (``check=""`` opts a single call back out).
+
+    ``temporal_window=w`` compiles an **incremental temporal** plan instead:
+    ``shape`` is then the per-frame spatial shape (no batch axis — one plan
+    per stream) and the result is a
+    :class:`~repro.core.stream_state.GLCMStreamPlan` exposing
+    ``init_state()`` / ``update(state, frame)`` / ``rolling(video)``.  The
+    per-frame vote delta reuses this plan's fused quantize→vote path
+    (Pallas kernels included) as a unit-batch partial-counts program;
+    expiry subtracts the ring-buffered delta of the frame leaving the
+    ``w``-frame window, and symmetric/normalize/Haralick are applied lazily
+    on the accumulated signed-int32 counts — bit-exact against a full
+    recompute of the window at every step.
     """
     if check is None and _lint_enabled_by_env():
         check = "lint"
@@ -257,6 +285,19 @@ def compile_plan(
         raise ValueError(f"unknown check mode {check!r}; expected 'lint'")
     shape = tuple(int(s) for s in shape)
     nd = spec.ndim
+    if temporal_window is not None:
+        if not isinstance(temporal_window, int) or temporal_window < 1:
+            raise ValueError(
+                f"temporal_window must be a positive int or None, got "
+                f"{temporal_window!r}"
+            )
+        if len(shape) != nd:
+            raise ValueError(
+                f"temporal plans stream unbatched frames: expected a "
+                f"{'(H, W)' if nd == 2 else '(D, H, W)'} frame shape for an "
+                f"ndim={nd} spec, got {shape} (the time axis is the stream, "
+                f"not a shape dimension)"
+            )
     if len(shape) not in (nd, nd + 1):
         expect = ("(H, W) or (B, H, W)" if nd == 2
                   else "(D, H, W) or (B, D, H, W)")
@@ -273,7 +314,7 @@ def compile_plan(
     # The tuned choice is part of the key: a persisted winner hits the same
     # cached plan every time, while a newly-recorded winner misses to a
     # fresh compile instead of serving the stale program.
-    key = (spec, shape, features, require, tuned)
+    key = (spec, shape, features, require, tuned, temporal_window)
     with _LOCK:
         plan = _CACHE.get(key)
         if plan is not None:
@@ -352,6 +393,43 @@ def compile_plan(
             mats = haralick_features(mats, select=select)
         return mats
 
+    if temporal_window is not None:
+        # Incremental temporal mode: the per-frame vote delta is this very
+        # plan's quantize→vote path applied to a unit batch — the per-frame
+        # partial-counts contract every backend (Pallas kernels included)
+        # already serves.  Counts round-trip through int32: backend float32
+        # outputs are integral (exact below 2³¹ per cell), and the rolling
+        # state MUST be signed — expiry subtraction transiently underflows
+        # unsigned widths (the stream-signed-accum contract).
+        def delta_fn(frame: jax.Array) -> jax.Array:
+            stack = frame[None]
+            if fused:
+                if is_identity_quantize(frame.dtype, resolved.levels,
+                                        vmin, vmax):
+                    stack = stack.astype(jnp.int32)
+                    qargs = None
+                else:
+                    qargs = uniform_params(stack, vmin=vmin, vmax=vmax,
+                                           batched=True)
+            else:
+                if quant is not None:
+                    frame = quant(frame)
+                stack = frame.astype(jnp.int32)[None]
+                qargs = None
+            counts = _backends.compute_regions(
+                backend, stack, resolved, quant=qargs
+            )
+            return counts[0].astype(jnp.int32)
+
+        plan = GLCMStreamPlan(
+            spec=resolved, backend=backend, shape=shape,
+            window=temporal_window, features=features, delta_fn=delta_fn,
+            tail_fn=tail, grid=grid, fused_quantize=fused,
+            host_native=backend.caps.host_native, tuned=tuned,
+        )
+        plan = _cache_put(key, plan)
+        return _ensure_linted(plan) if check == "lint" else plan
+
     def run(img: jax.Array) -> jax.Array:
         if fused:
             stack = img if batched else img[None]
@@ -426,11 +504,5 @@ def compile_plan(
         fn=fn, grid=grid, fused_quantize=fused, host_native=host,
         tuned=tuned,
     )
-    with _LOCK:
-        plan = _CACHE.setdefault(key, plan)
-        _CACHE.move_to_end(key)
-        _STATS["misses"] += 1
-        while len(_CACHE) > _LIMIT[0]:
-            _CACHE.popitem(last=False)
-            _STATS["evictions"] += 1
+    plan = _cache_put(key, plan)
     return _ensure_linted(plan) if check == "lint" else plan

@@ -27,7 +27,13 @@ import dataclasses
 
 from repro.kernels.ref import glcm_offsets, glcm_offsets_3d
 
-__all__ = ["GLCMSpec", "ACCUM_MODES", "QUANTIZE_MODES", "REGION_MODES"]
+__all__ = [
+    "GLCMSpec",
+    "ACCUM_MODES",
+    "BATCH_MODES",
+    "QUANTIZE_MODES",
+    "REGION_MODES",
+]
 
 # Valid ``quantize`` modes (``core.quantize``): None passes the image through
 # (already quantized), "uniform" rebins linearly, "equalized" equal-population.
@@ -40,6 +46,15 @@ QUANTIZE_MODES = (None, "uniform", "equalized")
 # voting (exact counts, uint16/int32 scatter cells widened before any
 # reduction); "float32" forces the legacy float path.
 ACCUM_MODES = ("auto", "int", "float32")
+
+# Valid ``batch_mode`` (Pallas batch-axis topology) modes.  "grid" carries the
+# batch as a leading kernel grid axis (ONE launch per stack — the TPU serving
+# path); "unroll" emits one single-image kernel call per batch element inside
+# the same jitted program (B launches, no cross-image grid state — the fast
+# path under CPU interpret mode, where per-grid-step interpretation overhead
+# grows superlinearly with the grid's batch extent); "auto" defers to the
+# backend default ("grid" today) and is what the autotuner overrides.
+BATCH_MODES = ("auto", "grid", "unroll")
 
 # Valid ``region`` modes: "global" is one GLCM per whole image (the classic
 # workload), "tiles" one GLCM per cell of a non-overlapping partition (the
@@ -120,6 +135,11 @@ class GLCMSpec:
                 default 2048). Must be a multiple of ``copies``.
     slab_d      Pallas volume-kernel depth-slab override (None = kernel
                 default: max(8, largest dz) rounded up to 8).
+    batch_mode  Pallas batch-axis topology (see BATCH_MODES): "grid" rides
+                the batch on the kernel grid (one launch per stack), "unroll"
+                emits one single-image kernel call per batch element ("auto"
+                = backend default). An autotuner knob — see ``core.autotune``;
+                non-Pallas backends ignore it.
     """
 
     levels: int
@@ -139,6 +159,7 @@ class GLCMSpec:
     tile_h: int | None = None
     chunk: int | None = None
     slab_d: int | None = None
+    batch_mode: str = "auto"
 
     def __post_init__(self):
         if self.ndim not in (2, 3):
@@ -169,6 +190,11 @@ class GLCMSpec:
         if self.accum not in ACCUM_MODES:
             raise ValueError(
                 f"unknown accum mode {self.accum!r}; expected one of {ACCUM_MODES}"
+            )
+        if self.batch_mode not in BATCH_MODES:
+            raise ValueError(
+                f"unknown batch_mode {self.batch_mode!r}; expected one of "
+                f"{BATCH_MODES}"
             )
         for knob in ("tile_h", "chunk", "slab_d"):
             v = getattr(self, knob)

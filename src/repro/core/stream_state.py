@@ -1,0 +1,232 @@
+"""Incremental temporal GLCM: exact rolling-window co-occurrence state.
+
+Co-occurrence is a pure sum over pixel pairs, so a rolling temporal window
+over a (T, H, W) video admits an *exact* incremental update: frame t's
+window GLCM is frame t-1's plus the arriving frame's per-frame vote delta
+minus the delta of the frame that just left the window.  Integer add and
+subtract are exact, so the incremental path is bit-identical to a full
+recompute of the window — the paper's "optimization without losing the
+computational accuracy" applied along the time axis (one frame-compute per
+step instead of ``window``).
+
+:class:`GLCMStreamState` is the explicit, allocatable carry — the Mamba
+``InferenceCache`` idiom: a pytree threaded through ``jax.lax.scan`` for
+offline (T, *spatial) stacks and stepped frame-by-frame online:
+
+* ``counts`` — the accumulated window counts, **signed** int32 of shape
+  (*grid, n_pairs, L, L) ((gh, gw, n_pairs, L, L) for region specs).
+  Signedness is a contract, not a convenience: the expiry subtraction can
+  transiently underflow the uint16 auto-width used for single-frame counts
+  (enforced by the ``stream-signed-accum`` lint rule in
+  :mod:`repro.analysis`).
+* ``ring`` — the last ``window`` frames' per-frame deltas, (window, *grid,
+  n_pairs, L, L) int32, so expiry is a subtraction of a *stored* delta,
+  never a recompute.
+* ``pos`` — the ring slot the next update expires and overwrites.
+* ``seen`` — total frames consumed (warm-up bookkeeping).
+
+Warm-up semantics: the ring starts at zero, so for the first ``window``
+frames the expiry subtracts zero and ``counts`` is the exact sum over the
+frames seen so far (a growing window until it fills).
+
+Exactness bounds: per-frame counts are exact through every backend (float32
+backend outputs are integral and < 2³¹ cells round-trip exactly through the
+int32 cast for any frame below ~46k×46k); the accumulated int32 cell bound
+is ``window × per-frame pair count``.
+
+:class:`GLCMStreamPlan` is the compiled product ``core.plan.compile_plan``
+returns for ``temporal_window=`` specs: ``init_state()`` / ``update(state,
+frame)`` (jitted; the delta reuses the plan's fused quantize→vote path,
+Pallas kernels included, via the per-frame partial-counts contract) /
+``rolling(video)`` (a ``lax.scan``), with normalization / symmetrization /
+Haralick applied lazily on the accumulated counts.  (De)serialization for
+checkpoint/resume: ``state_dict``/``from_state_dict`` and ``save``/``load``
+(npz).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["GLCMStreamPlan", "GLCMStreamState", "init_state", "stream_step"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class GLCMStreamState:
+    """The rolling-window carry (see module docstring for field semantics)."""
+
+    counts: jax.Array  # (*grid, n_pairs, L, L) signed int32
+    ring: jax.Array    # (window, *grid, n_pairs, L, L) signed int32
+    pos: jax.Array     # () int32 — next slot to expire/overwrite
+    seen: jax.Array    # () int32 — frames consumed so far
+
+    def tree_flatten(self):
+        return (self.counts, self.ring, self.pos, self.seen), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def window(self) -> int:
+        return int(self.ring.shape[0])
+
+    # -- checkpoint/resume -------------------------------------------------
+
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """Host-side snapshot (plain ndarrays; json/npz-friendly keys)."""
+        return {
+            "counts": np.asarray(self.counts),
+            "ring": np.asarray(self.ring),
+            "pos": np.asarray(self.pos),
+            "seen": np.asarray(self.seen),
+        }
+
+    @classmethod
+    def from_state_dict(cls, state: dict) -> GLCMStreamState:
+        """Rebuild device state from :meth:`state_dict` output (dtypes are
+        re-pinned to the signed-int32 contract)."""
+        return cls(
+            counts=jnp.asarray(state["counts"], jnp.int32),
+            ring=jnp.asarray(state["ring"], jnp.int32),
+            pos=jnp.asarray(state["pos"], jnp.int32),
+            seen=jnp.asarray(state["seen"], jnp.int32),
+        )
+
+    def save(self, path) -> None:
+        np.savez(path, **self.state_dict())
+
+    @classmethod
+    def load(cls, path) -> GLCMStreamState:
+        with np.load(path) as data:
+            return cls.from_state_dict({k: data[k] for k in data.files})
+
+
+def init_state(
+    window: int, grid: tuple[int, ...], n_pairs: int, levels: int
+) -> GLCMStreamState:
+    """A zeroed carry for a ``window``-frame stream of (*grid, n_pairs, L, L)
+    per-frame count deltas."""
+    cell = tuple(grid) + (n_pairs, levels, levels)
+    return GLCMStreamState(
+        counts=jnp.zeros(cell, jnp.int32),
+        ring=jnp.zeros((window,) + cell, jnp.int32),
+        pos=jnp.zeros((), jnp.int32),
+        seen=jnp.zeros((), jnp.int32),
+    )
+
+
+def stream_step(
+    state: GLCMStreamState, delta: jax.Array, window: int
+) -> GLCMStreamState:
+    """One exact rolling-window update: add the arriving frame's ``delta``,
+    subtract the expiring slot's stored delta, advance the ring."""
+    expired = jax.lax.dynamic_index_in_dim(
+        state.ring, state.pos, axis=0, keepdims=False
+    )
+    counts = state.counts + delta - expired
+    ring = jax.lax.dynamic_update_index_in_dim(
+        state.ring, delta, state.pos, axis=0
+    )
+    pos = jax.lax.rem(state.pos + 1, jnp.int32(window))
+    return GLCMStreamState(counts=counts, ring=ring, pos=pos,
+                           seen=state.seen + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class GLCMStreamPlan:
+    """A compiled incremental temporal GLCM program for one frame shape.
+
+    Built by ``core.plan.compile_plan(spec, frame_shape,
+    temporal_window=w)``.  ``shape`` is the *frame* spatial shape ((H, W) or
+    (D, H, W) — streams carry no batch axis; one plan per stream shape).
+    ``delta_fn(frame) -> (*grid, n_pairs, L, L) int32`` is the per-frame
+    partial-counts contract (the plan's fused quantize→vote path applied to
+    a unit batch); ``tail_fn`` applies symmetric/normalize/Haralick lazily
+    on the accumulated counts.  ``update`` is jitted once; ``rolling`` jits
+    a ``lax.scan`` per (T, *shape) video shape.
+    """
+
+    spec: object
+    backend: object
+    shape: tuple[int, ...]
+    window: int
+    features: bool | tuple[str, ...]
+    delta_fn: Callable[[jax.Array], jax.Array]
+    tail_fn: Callable[[jax.Array], jax.Array]
+    grid: tuple[int, ...] = ()
+    fused_quantize: bool = False
+    host_native: bool = False
+    tuned: object = None
+    lint: tuple | None = None  # analysis.Finding tuple once linted
+
+    def __post_init__(self):
+        object.__setattr__(self, "_update", jax.jit(self.update_fn))
+        object.__setattr__(self, "_rolling", jax.jit(self._rolling_fn))
+
+    # -- the stream program ------------------------------------------------
+
+    def update_fn(
+        self, state: GLCMStreamState, frame: jax.Array
+    ) -> tuple[GLCMStreamState, jax.Array]:
+        """The un-jitted step (traced by ``jax.lax.scan`` and the analysis
+        layer): state × frame → (state', counts-or-features)."""
+        state = stream_step(state, self.delta_fn(frame), self.window)
+        return state, self.tail_fn(state.counts.astype(jnp.float32))
+
+    def init_state(self) -> GLCMStreamState:
+        return init_state(
+            self.window, self.grid, self.spec.n_pairs, self.spec.levels
+        )
+
+    def state_struct(self) -> GLCMStreamState:
+        """Abstract (ShapeDtypeStruct) carry — for tracing/linting without
+        allocating."""
+        cell = self.grid + (self.spec.n_pairs, self.spec.levels,
+                            self.spec.levels)
+        return GLCMStreamState(
+            counts=jax.ShapeDtypeStruct(cell, jnp.int32),
+            ring=jax.ShapeDtypeStruct((self.window,) + cell, jnp.int32),
+            pos=jax.ShapeDtypeStruct((), jnp.int32),
+            seen=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+
+    def update(
+        self, state: GLCMStreamState, frame: jax.Array
+    ) -> tuple[GLCMStreamState, jax.Array]:
+        """One online step (jitted): consume ``frame``, return the advanced
+        state and the window's counts/features."""
+        return self._update(state, frame)
+
+    def _rolling_fn(self, state: GLCMStreamState, video: jax.Array):
+        return jax.lax.scan(self.update_fn, state, video)
+
+    def rolling(
+        self,
+        video: jax.Array,
+        *,
+        init: GLCMStreamState | None = None,
+        return_state: bool = False,
+    ):
+        """Offline (T, *spatial) stack → (T, …) per-step outputs via one
+        ``lax.scan`` (state carried on-device across all T steps).  Pass
+        ``init=`` to resume a checkpointed stream; ``return_state=True``
+        additionally returns the final carry."""
+        video = jnp.asarray(video)
+        if video.ndim != len(self.shape) + 1 or video.shape[1:] != self.shape:
+            raise ValueError(
+                f"expected a (T, {', '.join(map(str, self.shape))}) video "
+                f"for this stream plan, got {video.shape}"
+            )
+        state = self.init_state() if init is None else init
+        state, outs = self._rolling(state, video)
+        return (outs, state) if return_state else outs
+
+    def __call__(self, video: jax.Array) -> jax.Array:
+        return self.rolling(video)

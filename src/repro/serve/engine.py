@@ -10,7 +10,11 @@ coalesced into fixed (batch_size, H, W) stacks and computed by ONE batched
 dispatch per stack (for the Pallas fused scheme, one kernel launch for the
 whole batch — see ``kernels.glcm_kernel``). Fixed stack shape means exactly
 one compiled program serves all traffic; partial batches are padded and the
-padding results dropped.
+padding results dropped. A ``temporal_window`` config additionally serves
+stateful rolling-window video sessions (``open_stream``/``push``/
+``close_stream``) through the incremental temporal plan in
+``core.stream_state`` — one delta compute per frame, checkpoint/resume via
+the session's explicit ``GLCMStreamState``.
 """
 
 from __future__ import annotations
@@ -111,10 +115,16 @@ class GLCMServeConfig:
     # (spec.region of "tiles"/"window") serve per-request texture maps;
     # volumetric specs (spec.ndim == 3) serve (D, H, W) volume requests.
     spec: GLCMSpec | None = None
+    # Rolling-window video sessions: when set, the engine additionally
+    # compiles an incremental temporal plan (core.stream_state) and exposes
+    # open_stream/push/close_stream alongside the batch submit path.
+    temporal_window: int | None = None
 
     def __post_init__(self):
         if self.batch_size < 1:
             raise ValueError("batch_size must be >= 1")
+        if self.temporal_window is not None and self.temporal_window < 1:
+            raise ValueError("temporal_window must be >= 1")
         if self.spec is not None and not isinstance(self.spec, GLCMSpec):
             raise ValueError(f"cfg.spec must be a GLCMSpec, got {self.spec!r}")
         spec = self.glcm_spec()  # validate legacy fields (or explicit spec) now
@@ -162,6 +172,15 @@ class GLCMEngine:
     through ``core.plan.compile_plan`` exactly once for the fixed
     (batch_size, H, W) stack shape — the plan cache guarantees repeated
     engines with the same spec reuse the same compiled program.
+
+    Video sessions (``cfg.temporal_window=w``): ``open_stream()`` allocates
+    a rolling-window session (optionally resuming a checkpointed
+    :class:`~repro.core.stream_state.GLCMStreamState`), ``push(sid, frame)``
+    consumes one frame and returns the exact w-frame-window features (one
+    incremental delta compute, not a window recompute), and
+    ``close_stream(sid)`` retires the session and returns its final state
+    for checkpointing.  Sessions share the engine's spec/shape validation
+    and its one compiled stream program.
     """
 
     def __init__(self, cfg: GLCMServeConfig = GLCMServeConfig()):
@@ -172,37 +191,106 @@ class GLCMEngine:
         self.plan = compile_plan(
             self.spec, (cfg.batch_size, *cfg.image_shape), features=cfg.features
         )
+        self.stream_plan = (
+            compile_plan(
+                self.spec, tuple(cfg.image_shape), features=cfg.features,
+                temporal_window=cfg.temporal_window,
+            )
+            if cfg.temporal_window is not None else None
+        )
         self._pending: list[tuple[int, np.ndarray]] = []
         self._pending_tickets: set[int] = set()   # O(1) queued-ticket lookup
         self._results: dict[int, np.ndarray] = {}
+        self._streams: dict[int, object] = {}     # sid → GLCMStreamState
         self._next_ticket = 0
+        self._next_stream = 0
         self.batches_dispatched = 0
         self.images_served = 0
+        self.frames_streamed = 0
 
-    def submit(self, image: np.ndarray) -> int:
+    def _validate_request(self, image: np.ndarray, *, kind: str) -> np.ndarray:
         # Validate rank/shape/dtype EAGERLY: a malformed request must fail at
-        # submit time with a clear error, never later inside the batched
-        # jitted dispatch (where it would take the whole batch down with an
-        # opaque trace-time failure).
+        # submit/push time with a clear error, never later inside the jitted
+        # dispatch (where it would take the whole batch down with an opaque
+        # trace-time failure).
         image = np.asarray(image)
         want = tuple(self.cfg.image_shape)
         if image.ndim != len(want):
             raise ValueError(
-                f"request rank {image.ndim} (shape {image.shape}) != engine "
+                f"{kind} rank {image.ndim} (shape {image.shape}) != engine "
                 f"rank {len(want)}: this engine serves "
                 f"{'(D, H, W) volumes' if len(want) == 3 else '(H, W) images'} "
                 f"of shape {want}"
             )
         if image.shape != want:
             raise ValueError(
-                f"request shape {image.shape} != engine shape {want}")
+                f"{kind} shape {image.shape} != engine shape {want}")
         if not (np.issubdtype(image.dtype, np.integer)
                 or np.issubdtype(image.dtype, np.floating)
                 or np.issubdtype(image.dtype, np.bool_)):
             raise ValueError(
-                f"request dtype {image.dtype} is not a numeric gray-level "
+                f"{kind} dtype {image.dtype} is not a numeric gray-level "
                 f"type; expected an integer or float array"
             )
+        return image
+
+    # -- rolling-window video sessions ------------------------------------
+
+    def _require_streaming(self):
+        if self.stream_plan is None:
+            raise ValueError(
+                "this engine was built without cfg.temporal_window; "
+                "streaming sessions are disabled"
+            )
+
+    def open_stream(self, *, state=None) -> int:
+        """Allocate a video session; ``state=`` resumes a checkpoint (a
+        ``GLCMStreamState`` or its ``state_dict()``).  Returns the session
+        id for ``push``/``close_stream``."""
+        from repro.core.stream_state import GLCMStreamState
+
+        self._require_streaming()
+        if state is None:
+            state = self.stream_plan.init_state()
+        elif isinstance(state, dict):
+            state = GLCMStreamState.from_state_dict(state)
+        if state.window != self.cfg.temporal_window:
+            raise ValueError(
+                f"checkpointed state has window {state.window}, engine "
+                f"serves temporal_window={self.cfg.temporal_window}"
+            )
+        sid = self._next_stream
+        self._next_stream += 1
+        self._streams[sid] = state
+        return sid
+
+    def push(self, stream_id: int, frame: np.ndarray) -> np.ndarray:
+        """Consume one frame of session ``stream_id``; returns the rolling
+        window's features (or raw counts when ``cfg.features`` is False)."""
+        self._require_streaming()
+        if stream_id not in self._streams:
+            raise KeyError(f"stream {stream_id} is unknown or closed")
+        frame = self._validate_request(frame, kind="frame")
+        state, out = self.stream_plan.update(
+            self._streams[stream_id], jnp.asarray(frame)
+        )
+        self._streams[stream_id] = state
+        self.frames_streamed += 1
+        return np.asarray(out)
+
+    def close_stream(self, stream_id: int):
+        """Retire the session, returning its final ``GLCMStreamState`` (feed
+        it back to ``open_stream(state=...)`` — or persist it via
+        ``state.save(path)`` — to resume)."""
+        self._require_streaming()
+        if stream_id not in self._streams:
+            raise KeyError(f"stream {stream_id} is unknown or closed")
+        return self._streams.pop(stream_id)
+
+    # -- batched one-shot requests ----------------------------------------
+
+    def submit(self, image: np.ndarray) -> int:
+        image = self._validate_request(image, kind="request")
         ticket = self._next_ticket
         self._next_ticket += 1
         self._pending.append((ticket, image))

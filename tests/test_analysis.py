@@ -176,6 +176,66 @@ def test_fires_no_f64_promotion(scratch):
     assert "no-f64-promotion" in _rules_fired(findings)
 
 
+def test_fires_stream_signed_accum():
+    """A rolling update carried in uint16: both the state-aval probe and the
+    wrapping expiry-subtraction probe must fire."""
+    levels, window = 8, 4
+    cell = (1, levels, levels)
+
+    def bad_update(counts, ring, pos, delta):
+        expired = jax.lax.dynamic_index_in_dim(ring, pos, axis=0,
+                                               keepdims=False)
+        counts = counts + delta - expired  # uint16: wraps instead of borrows
+        ring = jax.lax.dynamic_update_index_in_dim(ring, delta, pos, axis=0)
+        return counts, ring, (pos + 1) % window
+
+    avals = (
+        jax.ShapeDtypeStruct(cell, jnp.uint16),
+        jax.ShapeDtypeStruct((window, *cell), jnp.uint16),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    jx = jax.make_jaxpr(bad_update)(
+        *avals, jax.ShapeDtypeStruct(cell, jnp.uint16)
+    )
+    ctx = jaxpr_lint.LintContext(
+        jaxpr=jx,
+        spec=GLCMSpec(levels=levels, pairs=((1, 0),), scheme="onehot"),
+        backend=_backends.get_backend("onehot"),
+        shape=(16, 16),
+        dtype=jnp.int32,
+        temporal_window=window,
+        state_avals=avals,
+    )
+    msgs = jaxpr_lint.get_rule("stream-signed-accum").check(ctx)
+    assert any("unsigned" in m and "state" in m for m in msgs)
+    assert any("sub" in m for m in msgs)
+
+
+def test_stream_rule_applies_only_to_temporal_plans():
+    spec = GLCMSpec(levels=8, pairs=((1, 0),), scheme="onehot")
+    kw = dict(
+        jaxpr=None, spec=spec, backend=_backends.get_backend("onehot"),
+        shape=(16, 16), dtype=jnp.int32,
+    )
+    plain = contracts.applicable_rules(jaxpr_lint.LintContext(**kw))
+    stream = contracts.applicable_rules(
+        jaxpr_lint.LintContext(**kw, temporal_window=4)
+    )
+    assert "stream-signed-accum" not in plain
+    assert "stream-signed-accum" in stream
+
+
+def test_stream_plan_lints_clean():
+    """The shipped incremental plan (signed-int32 state by construction)
+    must survive its own rule — and be traced as the update step."""
+    plan_cache_clear()
+    spec = GLCMSpec(levels=8, pairs=((1, 0),), scheme="onehot")
+    plan = compile_plan(spec, (16, 16), temporal_window=3)
+    assert jaxpr_lint.is_stream_plan(plan)
+    assert not jaxpr_lint.is_stream_plan(compile_plan(spec, (16, 16)))
+    assert jaxpr_lint.lint_plan(plan) == ()
+
+
 # ---------------------------------------------------------------------------
 # The live registry sweeps clean
 # ---------------------------------------------------------------------------

@@ -67,9 +67,48 @@ def test_tune_key_canonicalizes_knobs(sidecar):
     assert autotune.tune_key(SPEC.replace(copies=4), SHAPE) == base
     assert autotune.tune_key(SPEC.replace(scheme="onehot"), SHAPE) == base
     assert autotune.tune_key(SPEC.replace(chunk=1024), SHAPE) == base
+    assert autotune.tune_key(SPEC.replace(batch_mode="unroll"), SHAPE) == base
     # ...while genuine workload changes DO
     assert autotune.tune_key(SPEC.replace(levels=32), SHAPE) != base
     assert autotune.tune_key(SPEC, (4, 32, 32)) != base
+
+
+def test_candidates_include_batch_topology_for_batched_pallas():
+    """Batched Pallas workloads must measure BOTH launch topologies (the
+    batch-grid layout degrades past B≈4 in interpret mode) so "auto" can
+    never land on a batch-degrading path unexamined; unbatched workloads
+    must not waste measurements on the knob."""
+    for name in ("pallas", "pallas_fused"):
+        batched = autotune._candidates(SPEC, (8, 32, 32), name)
+        unrolled = [c for c in batched if c.get("batch_mode") == "unroll"]
+        assert len(unrolled) == len(batched) // 2
+        single = autotune._candidates(SPEC, (32, 32), name)
+        assert not any("batch_mode" in c for c in single)
+    vol = GLCMSpec(levels=8, pairs=((1, 0), (1, 4)), ndim=3)
+    assert any(
+        c.get("batch_mode") == "unroll"
+        for c in autotune._candidates(vol, (4, 8, 16, 16), "pallas_volume")
+    )
+
+
+def test_lookup_accepts_persisted_batch_mode_winner(sidecar):
+    """A sidecar entry carrying the batch_mode knob must survive lookup's
+    knob validation (knobs ⊆ KNOB_DEFAULTS) — otherwise persisted unroll
+    winners would be silently dropped on reload."""
+    key = autotune.tune_key(SPEC, SHAPE)
+    # onehot: eligible on any device (the Pallas backends are tpu_only, so
+    # a pallas entry would be rejected by DEVICE validation here on CPU —
+    # this test isolates the KNOB validation).
+    sidecar.write_text(json.dumps({
+        key: {"backend": "onehot",
+              "knobs": {"copies": 2, "batch_mode": "unroll"}, "us": 1.0}
+    }))
+    autotune.autotune_clear()
+    got = autotune.lookup(SPEC, SHAPE)
+    assert got is not None
+    assert dict(got.knobs)["batch_mode"] == "unroll"
+    tuned = got.apply(SPEC)
+    assert tuned.batch_mode == "unroll" and tuned.scheme == "onehot"
 
 
 def test_compile_plan_consumes_winner_and_caches(sidecar):

@@ -45,6 +45,50 @@ def test_batched_matches_brute_force(stack, scheme):
         np.testing.assert_array_equal(got[i], want)
 
 
+@pytest.mark.parametrize("scheme", ["pallas", "pallas_fused"])
+def test_batch_mode_unroll_matches_grid(stack, scheme):
+    """batch_mode="unroll" (B unit-batch kernel calls in one jitted program,
+    the batch-grid regression escape hatch) must be bit-identical to the
+    default batch-on-the-grid launch."""
+    from repro.core.plan import compile_plan
+    from repro.core.spec import GLCMSpec
+
+    spec = GLCMSpec(levels=16, pairs=((1, 0), (1, 135)), scheme=scheme)
+    grid = compile_plan(spec, stack.shape)(stack)
+    unroll = compile_plan(spec.replace(batch_mode="unroll"), stack.shape)(stack)
+    np.testing.assert_array_equal(np.asarray(unroll), np.asarray(grid))
+    # unit batches bypass the unroll (nothing to unroll)
+    one = compile_plan(spec.replace(batch_mode="unroll"), stack[:1].shape)(
+        stack[:1]
+    )
+    np.testing.assert_array_equal(np.asarray(one), np.asarray(grid[:1]))
+
+
+def test_batch_mode_unroll_fused_per_image_ranges(rng):
+    """The unroll must slice per-image quantization params correctly: each
+    image keeps its OWN (lo, span), identical to the batch-grid path."""
+    from repro.core.plan import compile_plan
+    from repro.core.spec import GLCMSpec
+
+    raw = jnp.asarray(
+        rng.random((4, 32, 48), dtype=np.float32) * np.asarray(
+            [50.0, 255.0, 10.0, 128.0]
+        )[:, None, None]
+    )
+    spec = GLCMSpec(levels=16, pairs=((1, 0),), scheme="pallas_fused",
+                    quantize="uniform")
+    grid = compile_plan(spec, raw.shape)(raw)
+    unroll = compile_plan(spec.replace(batch_mode="unroll"), raw.shape)(raw)
+    np.testing.assert_array_equal(np.asarray(unroll), np.asarray(grid))
+
+
+def test_batch_mode_validation():
+    from repro.core.spec import GLCMSpec
+
+    with pytest.raises(ValueError, match="batch_mode"):
+        GLCMSpec(levels=8, pairs=((1, 0),), batch_mode="bogus")
+
+
 def test_acceptance_shape_8_64_64(rng):
     """The PR acceptance criterion, verbatim: (8, 64, 64) → (8, L, L),
     bit-exact vs the stacked loop for every scheme."""
