@@ -21,6 +21,15 @@ file is recorded, not gated — the ratchet only tightens):
   * ``speedups.stream_incremental_vs_recompute`` (per window × mode) — the
     temporal serving headline, incremental rolling-window update vs full
     window recompute.
+  * ``speedups.serve_continuous_vs_fixed`` (per metric) — the serving
+    headline: continuous (deadline) batching vs the full-batch-only engine
+    (p99/p50 latency at 50% load, throughput at saturation).
+
+A gated section that the fresh run produces but the committed baseline
+lacks entirely fails LOUDLY ("new section missing from committed BENCH"):
+a benchmark adding a section must land its baseline numbers in
+``BENCH_glcm.json`` in the same change, or the ratchet silently never
+ratchets it.
 
 A fresh ratio may undershoot the committed one by up to ``--noise``
 (default 35% — single-core CI hosts jitter; the committed numbers are from
@@ -51,13 +60,26 @@ def gate(
 ) -> tuple[list[str], list[str]]:
     """Compare gated ratio metrics; returns (regressions, report_lines)."""
     gated_sections = (
-        "vs_serial_cpu", "batch_vs_b1", "stream_incremental_vs_recompute"
+        "vs_serial_cpu", "batch_vs_b1", "stream_incremental_vs_recompute",
+        "serve_continuous_vs_fixed",
     )
     regressions: list[str] = []
     report: list[str] = []
     for section in gated_sections:
         base = _flatten(committed.get("speedups", {}).get(section, {}))
         new = _flatten(fresh.get("speedups", {}).get(section, {}))
+        if new and section not in committed.get("speedups", {}):
+            # A brand-new section must land its committed baseline in the
+            # same change — otherwise the ratchet silently never gates it.
+            report.append(
+                f"  {section}: new section missing from committed BENCH "
+                f"baseline (fresh run produced {len(new)} metric(s); add "
+                f"the section to BENCH_glcm.json)"
+            )
+            regressions.append(
+                f"{section}: new section missing from committed BENCH"
+            )
+            continue
         for key in sorted(base):
             if key not in new:
                 report.append(f"  {section}/{key}: missing from fresh run")
@@ -87,7 +109,8 @@ def _fresh_run(out_path: str) -> dict:
     from benchmarks import common, run as runner
 
     common.reset_results()
-    for mod_name in ("fig5_speedup", "batch_throughput", "stream_throughput"):
+    for mod_name in ("fig5_speedup", "batch_throughput", "stream_throughput",
+                     "serve_load"):
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
         print(f"# perf_gate: running {mod_name}", file=sys.stderr)
         mod.run()
@@ -99,6 +122,9 @@ def _fresh_run(out_path: str) -> dict:
             ),
             "batch_vs_b1": runner._batch_speedups(common.RESULTS),
             "stream_incremental_vs_recompute": runner._stream_speedups(
+                common.RESULTS
+            ),
+            "serve_continuous_vs_fixed": runner._serve_speedups(
                 common.RESULTS
             ),
         },

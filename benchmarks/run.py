@@ -22,7 +22,8 @@ from repro.core.plan import plan_cache_stats
 
 MODULES = ("table2_scheme1", "table3_scheme2", "table4_transfer",
            "fig4_async", "fig5_speedup", "moe_dispatch", "batch_throughput",
-           "texture_map", "volume_throughput", "stream_throughput")
+           "texture_map", "volume_throughput", "stream_throughput",
+           "serve_load")
 
 
 def _batch_speedups(rows: list[dict]) -> dict:
@@ -95,6 +96,17 @@ def _texture_map_speedups(rows: list[dict]) -> dict:
     return out
 
 
+def _serve_speedups(rows: list[dict]) -> dict:
+    """metric → continuous-vs-fixed serving ratio from serve_load's rows
+    (p99/p50 latency at 50% load, throughput at saturation — the serving
+    headline the perf gate ratchets)."""
+    return {
+        r["serve_metric"]: round(r["ratio"], 3)
+        for r in rows
+        if "serve_metric" in r
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -159,6 +171,7 @@ def main() -> None:
                 "stream_incremental_vs_recompute": _stream_speedups(
                     common.RESULTS
                 ),
+                "serve_continuous_vs_fixed": _serve_speedups(common.RESULTS),
             },
             "rows": common.RESULTS,
         }

@@ -294,9 +294,26 @@ def autotune(
     x = _sample_input(spec, shape)
     measured: list[tuple[float, str, dict]] = []
     skipped: list[dict] = []
+    batched = len(shape) == spec.ndim + 1 and shape[0] > 1
     for name in _backends.available_backends():
         backend = _backends.get_backend(name)
         if not _eligible(backend, spec, require):
+            continue
+        if name == "scatter" and batched and jax.default_backend() == "cpu":
+            # XLA-CPU scatter-add cost per element roughly doubles once the
+            # flattened index stream passes ~16-32k entries, so batching B
+            # images into one scatter runs at 0.6-0.8x the B=1 throughput
+            # (BENCH_glcm.json batch_vs_b1.scatter; chunked/unrolled/vmapped
+            # variants all measured no better — see schemes.glcm_scatter_batch).
+            # Not a competitive batched candidate on CPU: route "auto" away.
+            skipped.append(
+                {"backend": name, "knobs": {},
+                 "reason": "batched scatter on XLA-CPU is sublinear "
+                           "(index-stream length scaling); excluded from "
+                           "the batched search"}
+            )
+            if verbose:
+                print(f"  {name}: skipped (batched scatter on cpu)")
             continue
         for knobs in _candidates(spec, shape, name):
             try:

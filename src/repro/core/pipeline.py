@@ -36,7 +36,24 @@ from repro.core.plan import compile_plan
 from repro.core.schemes import PAPER_PAIRS
 from repro.core.spec import GLCMSpec
 
-__all__ = ["GLCMStream", "glcm_feature_stream", "coalesce_images"]
+__all__ = ["GLCMStream", "glcm_feature_stream", "coalesce_images", "pad_stack"]
+
+
+def pad_stack(images: list[np.ndarray], size: int) -> tuple[np.ndarray, int]:
+    """Stack ``images`` padded up to ``size`` entries → (stack, n_valid).
+
+    Padding repeats the last image (never a zeros tensor: padded slots run
+    the same data-dependent work as real ones, so padded-launch timings are
+    honest), marking how many leading entries are real.  The shared
+    padded-launch primitive of ``coalesce_images`` and the serve engine's
+    bucketed dispatch.
+    """
+    k = len(images)
+    if not 1 <= k <= size:
+        raise ValueError(f"need 1..{size} images, got {k}")
+    buf = [np.asarray(im) for im in images]
+    buf.extend([buf[-1]] * (size - k))
+    return np.stack(buf), k
 
 
 def coalesce_images(
@@ -57,9 +74,7 @@ def coalesce_images(
             yield np.stack(buf), batch_size
             buf = []
     if buf:
-        k = len(buf)
-        buf.extend([buf[-1]] * (batch_size - k))
-        yield np.stack(buf), k
+        yield pad_stack(buf, batch_size)
 
 
 class GLCMStream:

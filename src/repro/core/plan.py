@@ -175,6 +175,48 @@ def plan_cache_stats() -> dict:
         }
 
 
+def bucket_sizes(
+    max_batch: int, buckets: tuple[int, ...] | None = None
+) -> tuple[int, ...]:
+    """The ascending launch stack sizes a batched server pre-declares.
+
+    ``None`` → the powers of two up to ``max_batch`` plus ``max_batch``
+    itself (8 → (1, 2, 4, 8); 6 → (1, 2, 4, 6)), so a partial dispatch of
+    k requests pads at most k-1 slots while only O(log max_batch) program
+    shapes ever compile.  An explicit tuple is validated: positive,
+    strictly ascending, ending at ``max_batch``.
+    """
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    if buckets is None:
+        sizes = []
+        b = 1
+        while b < max_batch:
+            sizes.append(b)
+            b *= 2
+        sizes.append(max_batch)
+        return tuple(sizes)
+    sizes = tuple(int(b) for b in buckets)
+    if not sizes or any(b < 1 for b in sizes):
+        raise ValueError(f"buckets must be positive, got {buckets!r}")
+    if any(a >= b for a, b in zip(sizes, sizes[1:])):
+        raise ValueError(f"buckets must be strictly ascending, got {buckets!r}")
+    if sizes[-1] != max_batch:
+        raise ValueError(
+            f"buckets must end at the batch size {max_batch}, got {buckets!r}")
+    return sizes
+
+
+def pick_bucket(buckets: tuple[int, ...], n: int) -> int:
+    """The smallest pre-declared bucket that fits ``n`` requests."""
+    if n < 1:
+        raise ValueError(f"need at least one request, got {n}")
+    for b in buckets:
+        if b >= n:
+            return b
+    raise ValueError(f"{n} requests exceed the largest bucket {buckets[-1]}")
+
+
 def _quantizer(spec: GLCMSpec) -> Callable[[jax.Array], jax.Array] | None:
     if spec.quantize is None:
         return None

@@ -225,6 +225,17 @@ def glcm_scatter_batch(
     form at every B (and the segments are disjoint, so per-cell bounds —
     and uint16 eligibility — are unchanged). Returns (B, n_off, L, L)
     int32 counts.
+
+    Known residual (XLA-CPU): even the flat form is SUBLINEAR in B —
+    ``batch_vs_b1.scatter`` sits at 0.6-0.8x of B=1 throughput. Profiling
+    isolated the cause to XLA-CPU's scatter-add itself: per-element cost
+    roughly doubles once the flattened index-stream length crosses
+    ~16-32k entries, *independent of accumulator size* (verified with the
+    cell count held constant). Chunking the stream, unrolling per image,
+    and vmapping all measured the same or worse, so the flat form stays —
+    it is still the best batched scatter — and the autotuner instead
+    excludes batched scatter from the ``scheme="auto"`` search on CPU
+    (recorded in its skip report) rather than pretending it competes.
     """
     b = stack.shape[0]
     n_off = len(offsets)

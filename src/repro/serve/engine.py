@@ -1,25 +1,55 @@
-"""Serving engines: LM generation and batched GLCM texture features.
+"""Serving engines: LM generation and continuous-batching GLCM features.
 
 ``Engine`` — a deliberately small but real LM engine: continuous batch of
 ``max_batch`` slots, greedy or temperature sampling, per-slot positions, EOS
 handling. Decode uses the model's cache API (full / ring / SSM states) — the
 same code path the dry-run lowers at (B=128, KV=32k).
 
-``GLCMEngine`` — the paper workload as a service: single-image requests are
-coalesced into fixed (batch_size, H, W) stacks and computed by ONE batched
-dispatch per stack (for the Pallas fused scheme, one kernel launch for the
-whole batch — see ``kernels.glcm_kernel``). Fixed stack shape means exactly
-one compiled program serves all traffic; partial batches are padded and the
-padding results dropped. A ``temporal_window`` config additionally serves
-stateful rolling-window video sessions (``open_stream``/``push``/
-``close_stream``) through the incremental temporal plan in
-``core.stream_state`` — one delta compute per frame, checkpoint/resume via
-the session's explicit ``GLCMStreamState``.
+``GLCMEngine`` — the paper workload as a production service.  The paper's
+50× comes from keeping the device saturated with batched work; the engine's
+job is to keep launches *full and frequent* under real traffic:
+
+* **Continuous batching with latency deadlines.**  ``submit()`` enqueues a
+  request; a full batch still auto-dispatches, but with
+  ``max_wait_ms`` set the engine also launches a PARTIAL batch the moment
+  the oldest queued request's age reaches the deadline — a lone request is
+  never stranded behind an unfilled batch.  ``max_wait_ms=None`` (the
+  default) is the legacy wait-until-full behavior.
+* **Bucketed launch shapes.**  Partial dispatches are padded up to the
+  smallest of a small set of pre-declared stack sizes (default the powers
+  of two up to ``batch_size``, e.g. 1/2/4/8) instead of the full batch, so
+  a deadline launch of one request pads one slot, not seven.  Bucket plans
+  resolve through the shared bounded-LRU plan cache
+  (``core.plan.compile_plan``) — engines with equal specs share programs.
+* **Many specs, one engine.**  ``register(spec, image_shape)`` adds a
+  workload (its own queue, buckets, plans, metrics) multiplexed over the
+  same dispatch loop; ``submit(img, workload=wid)`` routes to it.  The
+  config's own spec is workload 0.
+* **Priorities + backpressure.**  ``submit(..., priority=p)`` biases the
+  dequeue order (weighted: priority plus queued-age, so low-priority
+  requests age upward instead of starving; a deadline launch always
+  includes the oldest request).  ``max_queue_depth`` bounds each queue —
+  beyond it ``submit`` sheds the request with :class:`QueueFullError` and
+  the shed is counted in ``stats()``.
+* **Observability.**  ``stats()`` reports, per workload: queue depth,
+  p50/p95/p99 queue/service/end-to-end latency, a batch-occupancy
+  histogram, shed and result-eviction counters — plus the engine-wide
+  plan-cache hit rate.  ``dispatch_log`` keeps the last dispatches for
+  inspection.
+
+Results are held in a BOUNDED store (``max_results``): tickets never
+retrieved evict oldest-first (counted per workload) instead of growing
+forever.  A ``temporal_window`` config additionally serves stateful
+rolling-window video sessions (``open_stream``/``push``/``close_stream``)
+through the incremental temporal plan in ``core.stream_state`` — unchanged,
+and coexisting with the continuous batch traffic.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -97,6 +127,24 @@ def perplexity(cfg, params, tokens: np.ndarray) -> float:
 # ---------------------------------------------------------------------------
 
 
+class QueueFullError(RuntimeError):
+    """``submit()`` refused a request: the workload's queue is at
+    ``max_queue_depth``.  The request was shed (counted in ``stats()``) —
+    the caller owns the retry/drop policy."""
+
+
+def _percentiles(samples) -> dict:
+    """{'p50','p95','p99','mean','n'} of a latency sample window (ms)."""
+    if not samples:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0, "n": 0}
+    arr = np.asarray(samples, np.float64)
+    p50, p95, p99 = np.percentile(arr, (50.0, 95.0, 99.0))
+    return {
+        "p50": float(p50), "p95": float(p95), "p99": float(p99),
+        "mean": float(arr.mean()), "n": int(arr.size),
+    }
+
+
 @dataclasses.dataclass(frozen=True)
 class GLCMServeConfig:
     levels: int = 32
@@ -119,6 +167,22 @@ class GLCMServeConfig:
     # compiles an incremental temporal plan (core.stream_state) and exposes
     # open_stream/push/close_stream alongside the batch submit path.
     temporal_window: int | None = None
+    # -- continuous-batching knobs -----------------------------------------
+    # Latency deadline: dispatch a PARTIAL batch once the oldest queued
+    # request is this old.  None = legacy behavior (wait for a full batch
+    # or an explicit flush/result).
+    max_wait_ms: float | None = None
+    # Pre-declared partial-launch stack sizes (ascending, ending at
+    # batch_size).  None = powers of two up to batch_size (1/2/4/8 for 8).
+    buckets: tuple[int, ...] | None = None
+    # Backpressure: bound on EACH workload's queue depth; submit() beyond it
+    # raises QueueFullError and counts the shed.  None = unbounded.
+    max_queue_depth: int | None = None
+    # Bounded result store across all workloads: results never retrieved
+    # evict oldest-first once this many are held (counted in stats()).
+    max_results: int = 1024
+    # Latency-sample window per workload for the stats() percentiles.
+    stats_window: int = 2048
 
     def __post_init__(self):
         if self.batch_size < 1:
@@ -127,6 +191,18 @@ class GLCMServeConfig:
             raise ValueError("temporal_window must be >= 1")
         if self.spec is not None and not isinstance(self.spec, GLCMSpec):
             raise ValueError(f"cfg.spec must be a GLCMSpec, got {self.spec!r}")
+        if self.max_wait_ms is not None and not self.max_wait_ms > 0:
+            raise ValueError(
+                f"max_wait_ms must be positive or None, got {self.max_wait_ms}")
+        if self.max_queue_depth is not None and self.max_queue_depth < 1:
+            raise ValueError("max_queue_depth must be >= 1 or None")
+        if self.max_results < 1:
+            raise ValueError("max_results must be >= 1")
+        if self.stats_window < 1:
+            raise ValueError("stats_window must be >= 1")
+        from repro.core.plan import bucket_sizes
+
+        bucket_sizes(self.batch_size, self.buckets)  # validate eagerly
         spec = self.glcm_spec()  # validate legacy fields (or explicit spec) now
         if len(self.image_shape) != spec.ndim:
             raise ValueError(
@@ -147,31 +223,91 @@ class GLCMServeConfig:
         )
 
 
-class GLCMEngine:
-    """Request-coalescing texture-feature server.
+@dataclasses.dataclass
+class _Request:
+    ticket: int
+    image: np.ndarray
+    priority: int
+    submitted_at: float
 
-    ``submit(image)`` enqueues one request — an (H, W) image, or a
-    (D, H, W) volume when the engine's spec is volumetric (``ndim=3``) —
+
+class _Workload:
+    """One registered (spec, image_shape) served by the engine: its queue,
+    bucket plans, and metrics."""
+
+    def __init__(self, wid, name, spec, image_shape, features, batch_size,
+                 buckets, max_wait_ms, max_queue_depth, stats_window):
+        self.wid = wid
+        self.name = name
+        self.spec = spec
+        self.image_shape = tuple(image_shape)
+        self.features = features
+        self.batch_size = batch_size
+        self.buckets = buckets
+        self.max_wait_ms = max_wait_ms
+        self.max_queue_depth = max_queue_depth
+        self.queue: collections.deque[_Request] = collections.deque()
+        self.plans: dict[int, object] = {}     # bucket → GLCMPlan (lazy)
+        # metrics
+        self.submitted = 0
+        self.served = 0
+        self.shed = 0
+        self.results_evicted = 0
+        self.batches = 0
+        self.deadline_dispatches = 0
+        self.occupancy: dict[int, dict[int, int]] = {}  # bucket → {occ: n}
+        self.queue_ms: collections.deque = collections.deque(maxlen=stats_window)
+        self.service_ms: collections.deque = collections.deque(maxlen=stats_window)
+        self.e2e_ms: collections.deque = collections.deque(maxlen=stats_window)
+
+
+class GLCMEngine:
+    """Continuous-batching, multi-workload texture-feature server.
+
+    ``submit(image, workload=0, priority=0)`` enqueues one request — an
+    (H, W) image, or a (D, H, W) volume for a volumetric workload —
     validated eagerly (rank/shape/dtype) so malformed requests fail at
     submit time, never inside the batched jitted dispatch — and returns a
-    ticket; a
-    full batch auto-dispatches. ``flush()`` forces dispatch of a partial
-    batch (padded to ``batch_size`` via ``core.pipeline.coalesce_images``,
-    padding results dropped). ``result(ticket)`` returns the request's
-    output exactly once (flushing if it is still queued); asking again, or
-    for a ticket that was never issued, raises. ``map(images)`` is the
+    ticket.  A full batch auto-dispatches; with ``cfg.max_wait_ms`` set,
+    ``poll()`` (or any later ``submit``) also dispatches a *partial* batch
+    once the oldest queued request hits the deadline, padded to the
+    smallest pre-declared bucket size that fits.  ``flush()`` forces
+    dispatch of everything still queued.  ``result(ticket)`` returns the
+    request's output exactly once (flushing its workload if still queued);
+    asking again, for a never-issued ticket, or for a result evicted from
+    the bounded store, raises ``KeyError``.  ``map(images)`` is the
     batch-submit convenience used by benchmarks.
 
-    Per request: Haralick features (len(pairs), n_feats) when
-    ``cfg.features``, else the raw GLCM stack (len(pairs), L, L); a
+    Per request: Haralick features (len(pairs), n_feats) when the
+    workload's ``features``, else the raw GLCM stack (len(pairs), L, L); a
     region-structured spec prefixes the per-request output with its
     (gh, gw) tile/window grid (a texture map per request).
 
-    All requests must share ``cfg.image_shape`` so one program serves every
-    batch: the engine resolves its :class:`~repro.core.spec.GLCMSpec`
-    through ``core.plan.compile_plan`` exactly once for the fixed
-    (batch_size, H, W) stack shape — the plan cache guarantees repeated
-    engines with the same spec reuse the same compiled program.
+    **Multiplexing.**  ``register(spec, image_shape) -> workload_id`` adds
+    a workload with its own queue and metrics; all workloads share the
+    dispatch loop and the bounded-LRU plan cache
+    (``core.plan.compile_plan``), so an engine serving N specs compiles
+    exactly the same programs N dedicated engines would — and a request's
+    result is bit-identical to a dedicated single-spec engine's (batched
+    compute is per-image independent).  The config's own spec is workload
+    0 (``self.plan`` remains its full-batch plan).
+
+    **Dispatch order.**  Within a workload, requests are dequeued by
+    weighted priority: effective priority = ``priority`` + queued-age /
+    ``max_wait_ms`` (so low-priority requests age upward instead of
+    starving; ties are FIFO), and a request PAST its deadline outranks
+    any priority.  A deadline-triggered dispatch always includes the
+    oldest request — the deadline is a real per-request latency bound,
+    not a hint.  Without a deadline configured, priority order is strict
+    (document your own starvation policy).
+
+    ``pause()``/``resume()`` suspend and restore dispatch (warmup, drain
+    control, deterministic tests); ``warmup()`` pre-compiles and
+    pre-executes every bucket plan so no request pays a compile.
+
+    ``clock`` injects a monotonic time source (seconds) for deterministic
+    deadline tests and virtual-time replay; the default is
+    ``time.monotonic``.
 
     Video sessions (``cfg.temporal_window=w``): ``open_stream()`` allocates
     a rolling-window session (optionally resuming a checkpointed
@@ -179,18 +315,30 @@ class GLCMEngine:
     consumes one frame and returns the exact w-frame-window features (one
     incremental delta compute, not a window recompute), and
     ``close_stream(sid)`` retires the session and returns its final state
-    for checkpointing.  Sessions share the engine's spec/shape validation
-    and its one compiled stream program.
+    for checkpointing.  Sessions validate frames against workload 0's
+    shape and coexist with the continuous batch traffic.
     """
 
-    def __init__(self, cfg: GLCMServeConfig = GLCMServeConfig()):
+    def __init__(self, cfg: GLCMServeConfig = GLCMServeConfig(), *, clock=None):
         from repro.core.plan import compile_plan
 
         self.cfg = cfg
         self.spec = cfg.glcm_spec()
+        self._clock = clock if clock is not None else time.monotonic
+        self._workloads: dict[int, _Workload] = {}
+        self._next_workload = 0
+        self.register(
+            self.spec, cfg.image_shape, features=cfg.features,
+            batch_size=cfg.batch_size, buckets=cfg.buckets, name="default",
+        )
+        # Legacy surface: the full-batch plan of workload 0, compiled
+        # eagerly (spec/shape validation at construction, and equal configs
+        # share the same program via the plan cache).
+        w0 = self._workloads[0]
         self.plan = compile_plan(
             self.spec, (cfg.batch_size, *cfg.image_shape), features=cfg.features
         )
+        w0.plans[cfg.batch_size] = self.plan
         self.stream_plan = (
             compile_plan(
                 self.spec, tuple(cfg.image_shape), features=cfg.features,
@@ -198,27 +346,117 @@ class GLCMEngine:
             )
             if cfg.temporal_window is not None else None
         )
-        self._pending: list[tuple[int, np.ndarray]] = []
-        self._pending_tickets: set[int] = set()   # O(1) queued-ticket lookup
-        self._results: dict[int, np.ndarray] = {}
+        self._results: collections.OrderedDict[int, tuple[int, np.ndarray]] = (
+            collections.OrderedDict()
+        )
+        self._pending_wid: dict[int, int] = {}    # queued ticket → workload
         self._streams: dict[int, object] = {}     # sid → GLCMStreamState
         self._next_ticket = 0
         self._next_stream = 0
+        self._paused = False
         self.batches_dispatched = 0
         self.images_served = 0
         self.frames_streamed = 0
+        self.dispatch_log: collections.deque = collections.deque(maxlen=256)
 
-    def _validate_request(self, image: np.ndarray, *, kind: str) -> np.ndarray:
+    # -- workload registry -------------------------------------------------
+
+    def register(
+        self,
+        spec: GLCMSpec,
+        image_shape: tuple[int, ...],
+        *,
+        features: bool | tuple[str, ...] | None = None,
+        batch_size: int | None = None,
+        buckets: tuple[int, ...] | None = None,
+        max_wait_ms: float | None | object = "default",
+        max_queue_depth: int | None | object = "default",
+        name: str | None = None,
+    ) -> int:
+        """Add a workload (a served (spec, image_shape)); returns its id.
+
+        Unset knobs inherit the engine config's values.  The workload's
+        bucket plans resolve lazily through the shared plan cache, so
+        registering is cheap and equal specs never recompile.
+        """
+        from repro.core.plan import bucket_sizes
+
+        if not isinstance(spec, GLCMSpec):
+            raise ValueError(f"spec must be a GLCMSpec, got {spec!r}")
+        image_shape = tuple(int(s) for s in image_shape)
+        if len(image_shape) != spec.ndim:
+            raise ValueError(
+                f"image_shape {image_shape} has rank {len(image_shape)} but "
+                f"the workload spec is ndim={spec.ndim}"
+            )
+        batch_size = self.cfg.batch_size if batch_size is None else batch_size
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        wid = self._next_workload
+        self._next_workload += 1
+        self._workloads[wid] = _Workload(
+            wid=wid,
+            name=name if name is not None else f"workload{wid}",
+            spec=spec,
+            image_shape=image_shape,
+            features=self.cfg.features if features is None else features,
+            batch_size=batch_size,
+            buckets=bucket_sizes(batch_size, buckets),
+            max_wait_ms=(self.cfg.max_wait_ms if max_wait_ms == "default"
+                         else max_wait_ms),
+            max_queue_depth=(self.cfg.max_queue_depth
+                             if max_queue_depth == "default"
+                             else max_queue_depth),
+            stats_window=self.cfg.stats_window,
+        )
+        return wid
+
+    def workloads(self) -> tuple[int, ...]:
+        return tuple(self._workloads)
+
+    def _workload(self, workload: int) -> _Workload:
+        try:
+            return self._workloads[workload]
+        except KeyError:
+            raise KeyError(
+                f"workload {workload} is not registered; known ids: "
+                f"{sorted(self._workloads)}"
+            ) from None
+
+    def _plan_for(self, w: _Workload, bucket: int):
+        from repro.core.plan import compile_plan
+
+        plan = w.plans.get(bucket)
+        if plan is None:
+            plan = compile_plan(
+                w.spec, (bucket, *w.image_shape), features=w.features
+            )
+            w.plans[bucket] = plan
+        return plan
+
+    def warmup(self, workload: int | None = None) -> None:
+        """Compile AND execute every bucket plan (zero-input) so no live
+        request pays a compile; per workload, or all when None."""
+        wids = [workload] if workload is not None else list(self._workloads)
+        for wid in wids:
+            w = self._workload(wid)
+            for bucket in w.buckets:
+                stack = np.zeros((bucket, *w.image_shape), np.float32)
+                np.asarray(self._plan_for(w, bucket)(jnp.asarray(stack)))
+
+    # -- request validation ------------------------------------------------
+
+    def _validate_request(self, image: np.ndarray, *, kind: str,
+                          want: tuple[int, ...]) -> np.ndarray:
         # Validate rank/shape/dtype EAGERLY: a malformed request must fail at
         # submit/push time with a clear error, never later inside the jitted
         # dispatch (where it would take the whole batch down with an opaque
         # trace-time failure).
         image = np.asarray(image)
-        want = tuple(self.cfg.image_shape)
         if image.ndim != len(want):
             raise ValueError(
-                f"{kind} rank {image.ndim} (shape {image.shape}) != engine "
-                f"rank {len(want)}: this engine serves "
+                f"{kind} rank {image.ndim} (shape {image.shape}) != workload "
+                f"rank {len(want)}: this workload serves "
                 f"{'(D, H, W) volumes' if len(want) == 3 else '(H, W) images'} "
                 f"of shape {want}"
             )
@@ -270,7 +508,8 @@ class GLCMEngine:
         self._require_streaming()
         if stream_id not in self._streams:
             raise KeyError(f"stream {stream_id} is unknown or closed")
-        frame = self._validate_request(frame, kind="frame")
+        frame = self._validate_request(
+            frame, kind="frame", want=tuple(self.cfg.image_shape))
         state, out = self.stream_plan.update(
             self._streams[stream_id], jnp.asarray(frame)
         )
@@ -287,48 +526,235 @@ class GLCMEngine:
             raise KeyError(f"stream {stream_id} is unknown or closed")
         return self._streams.pop(stream_id)
 
-    # -- batched one-shot requests ----------------------------------------
+    # -- continuous-batched one-shot requests ------------------------------
 
-    def submit(self, image: np.ndarray) -> int:
-        image = self._validate_request(image, kind="request")
+    def submit(self, image: np.ndarray, *, workload: int = 0,
+               priority: int = 0) -> int:
+        """Enqueue one request for ``workload``; returns its ticket.
+
+        Raises :class:`QueueFullError` (the request is shed and counted)
+        when the workload's queue is at ``max_queue_depth``.  Submitting
+        also advances the dispatch loop: full buckets launch immediately,
+        and any workload whose oldest request has outlived its deadline
+        launches a partial bucket.
+        """
+        w = self._workload(workload)
+        image = self._validate_request(
+            image, kind="request", want=w.image_shape)
+        if (w.max_queue_depth is not None
+                and len(w.queue) >= w.max_queue_depth):
+            w.shed += 1
+            raise QueueFullError(
+                f"workload {w.wid} ({w.name}): queue is at "
+                f"max_queue_depth={w.max_queue_depth}; request shed "
+                f"(sheds so far: {w.shed})"
+            )
         ticket = self._next_ticket
         self._next_ticket += 1
-        self._pending.append((ticket, image))
-        self._pending_tickets.add(ticket)
-        if len(self._pending) == self.cfg.batch_size:
-            self._dispatch()
+        w.queue.append(_Request(ticket, image, priority, self._clock()))
+        w.submitted += 1
+        self._pending_wid[ticket] = w.wid
+        self.poll()
         return ticket
 
-    def flush(self) -> None:
-        if self._pending:
-            self._dispatch()
+    def poll(self) -> int:
+        """Advance the dispatch loop once: launch every full bucket, then
+        every deadline-expired partial bucket.  Returns the number of
+        batches dispatched.  Serving loops call this between arrivals; it
+        is also called from ``submit``."""
+        if self._paused:
+            return 0
+        n = 0
+        now = self._clock()
+        for w in self._workloads.values():
+            while len(w.queue) >= w.batch_size:
+                self._dispatch(w, w.batch_size, now=now)
+                n += 1
+            if (w.max_wait_ms is not None and w.queue
+                    and (now - w.queue[0].submitted_at) * 1e3 >= w.max_wait_ms):
+                # Launch the largest bucket the queue FILLS (5 queued →
+                # a full bucket-4 launch; the leftover's own deadline is
+                # later); pad up only when even the smallest bucket
+                # doesn't fill. Keeps deadline launches at ~100%
+                # occupancy instead of paying bucket-rounding padding.
+                k = max((b for b in w.buckets if b <= len(w.queue)),
+                        default=len(w.queue))
+                self._dispatch(w, k, now=now, deadline=True)
+                n += 1
+        return n
+
+    def next_deadline(self) -> float | None:
+        """The earliest clock time (in ``clock`` units) any workload's
+        deadline dispatch falls due, or None when nothing queued has a
+        deadline.  Event-driven serving loops sleep (or warp a virtual
+        clock) to this instant instead of polling blindly."""
+        due = None
+        for w in self._workloads.values():
+            if w.max_wait_ms is not None and w.queue:
+                t = w.queue[0].submitted_at + w.max_wait_ms * 1e-3
+                due = t if due is None else min(due, t)
+        return due
+
+    def pause(self) -> None:
+        """Suspend dispatch: submits only queue (sheds still apply)."""
+        self._paused = True
+
+    def resume(self) -> int:
+        """Re-enable dispatch and advance the loop once."""
+        self._paused = False
+        return self.poll()
+
+    def flush(self, workload: int | None = None) -> None:
+        """Dispatch everything queued (one workload, or all when None)."""
+        wids = [workload] if workload is not None else list(self._workloads)
+        for wid in wids:
+            w = self._workload(wid)
+            while w.queue:
+                self._dispatch(w, min(len(w.queue), w.batch_size),
+                               now=self._clock())
 
     def result(self, ticket: int) -> np.ndarray:
-        if ticket not in self._results and ticket in self._pending_tickets:
-            self.flush()
+        """The request's output, exactly once (flushes its workload if the
+        ticket is still queued)."""
+        if ticket not in self._results and ticket in self._pending_wid:
+            self.flush(self._pending_wid[ticket])
         if ticket not in self._results:
             raise KeyError(
-                f"ticket {ticket} is unknown or its result was already retrieved")
-        return self._results.pop(ticket)
+                f"ticket {ticket} is unknown, its result was already "
+                f"retrieved, or it was evicted from the bounded result "
+                f"store (max_results={self.cfg.max_results})"
+            )
+        return self._results.pop(ticket)[1]
 
-    def map(self, images) -> np.ndarray:
+    def map(self, images, *, workload: int = 0) -> np.ndarray:
         """Submit many images, flush, and return results stacked in order."""
-        tickets = [self.submit(im) for im in images]
-        self.flush()
+        tickets = [self.submit(im, workload=workload) for im in images]
+        self.flush(workload)
         return np.stack([self.result(t) for t in tickets])
 
-    def _dispatch(self) -> None:
-        from repro.core.pipeline import coalesce_images
+    def latencies(self, workload: int = 0, kind: str = "e2e") -> np.ndarray:
+        """The retained latency samples (ms) of one workload:
+        ``kind`` ∈ {"queue", "service", "e2e"}.  Bounded by
+        ``stats_window`` — a sliding window, not full history."""
+        w = self._workload(workload)
+        try:
+            samples = {"queue": w.queue_ms, "service": w.service_ms,
+                       "e2e": w.e2e_ms}[kind]
+        except KeyError:
+            raise ValueError(
+                f"kind must be 'queue', 'service' or 'e2e', got {kind!r}"
+            ) from None
+        return np.asarray(samples, np.float64)
 
-        tickets = [t for t, _ in self._pending]
-        imgs = [im for _, im in self._pending]
-        self._pending = []
-        self._pending_tickets.clear()
-        # Pad to the fixed stack shape — one compiled program for all
-        # traffic. len(imgs) <= batch_size here, so exactly one group.
-        (stack, k), = coalesce_images(imgs, self.cfg.batch_size)
-        out = np.asarray(self.plan(jnp.asarray(stack)))
-        for i, t in enumerate(tickets):
-            self._results[t] = out[i]
+    def stats(self) -> dict:
+        """The observability surface: per-workload queue depth,
+        p50/p95/p99 queue/service/end-to-end latency (ms), batch-occupancy
+        histogram ({bucket: {occupancy: count}}), submit/serve/shed/
+        eviction counters — plus engine-wide totals and the shared
+        plan-cache hit rate."""
+        from repro.core.plan import plan_cache_stats
+
+        per = {}
+        for wid, w in self._workloads.items():
+            per[wid] = {
+                "name": w.name,
+                "scheme": w.spec.scheme,
+                "ndim": w.spec.ndim,
+                "region": w.spec.region,
+                "batch_size": w.batch_size,
+                "buckets": tuple(w.buckets),
+                "queue_depth": len(w.queue),
+                "submitted": w.submitted,
+                "served": w.served,
+                "shed": w.shed,
+                "results_evicted": w.results_evicted,
+                "batches": w.batches,
+                "deadline_dispatches": w.deadline_dispatches,
+                "batch_occupancy": {
+                    b: dict(h) for b, h in sorted(w.occupancy.items())
+                },
+                "queue_ms": _percentiles(w.queue_ms),
+                "service_ms": _percentiles(w.service_ms),
+                "e2e_ms": _percentiles(w.e2e_ms),
+            }
+        return {
+            "batches_dispatched": self.batches_dispatched,
+            "images_served": self.images_served,
+            "frames_streamed": self.frames_streamed,
+            "results_held": len(self._results),
+            "open_streams": len(self._streams),
+            "paused": self._paused,
+            "plan_cache": plan_cache_stats(),
+            "workloads": per,
+        }
+
+    # -- dispatch core -----------------------------------------------------
+
+    def _take(self, w: _Workload, n: int, now: float,
+              deadline: bool) -> list[_Request]:
+        """Dequeue ``n`` requests by weighted priority (priority + queued
+        age in deadline units; FIFO ties).  A deadline dispatch always
+        includes the oldest request — its latency bound is the trigger."""
+        if n >= len(w.queue):
+            taken = list(w.queue)
+            w.queue.clear()
+            return taken
+        scale = 1e3 / w.max_wait_ms if w.max_wait_ms else 0.0
+
+        def score(idx_req):
+            idx, r = idx_req
+            boost = (now - r.submitted_at) * scale
+            # A request PAST its deadline outranks any priority: the
+            # deadline is a per-request latency bound, not a tiebreak.
+            if boost >= 1.0:
+                boost += 1e9
+            return (-(r.priority + boost), idx)
+
+        ranked = sorted(enumerate(w.queue), key=score)
+        picked = {idx for idx, _ in ranked[:n]}
+        if deadline and 0 not in picked:
+            picked.discard(ranked[n - 1][0])
+            picked.add(0)
+        taken = [r for idx, r in enumerate(w.queue) if idx in picked]
+        w.queue = collections.deque(
+            r for idx, r in enumerate(w.queue) if idx not in picked
+        )
+        return taken
+
+    def _dispatch(self, w: _Workload, n: int, *, now: float,
+                  deadline: bool = False) -> None:
+        from repro.core.pipeline import pad_stack
+        from repro.core.plan import pick_bucket
+
+        reqs = self._take(w, n, now, deadline)
+        k = len(reqs)
+        bucket = pick_bucket(w.buckets, k)
+        stack, _ = pad_stack([r.image for r in reqs], bucket)
+        t_disp = self._clock()
+        out = np.asarray(self._plan_for(w, bucket)(jnp.asarray(stack)))
+        t_done = self._clock()
+        for i, r in enumerate(reqs):
+            self._pending_wid.pop(r.ticket, None)
+            self._store_result(r.ticket, w.wid, out[i])
+            w.queue_ms.append((t_disp - r.submitted_at) * 1e3)
+            w.service_ms.append((t_done - t_disp) * 1e3)
+            w.e2e_ms.append((t_done - r.submitted_at) * 1e3)
+        w.batches += 1
+        w.served += k
+        if deadline:
+            w.deadline_dispatches += 1
+        w.occupancy.setdefault(bucket, {})
+        w.occupancy[bucket][k] = w.occupancy[bucket].get(k, 0) + 1
         self.batches_dispatched += 1
         self.images_served += k
+        self.dispatch_log.append({
+            "workload": w.wid, "bucket": bucket, "occupancy": k,
+            "tickets": tuple(r.ticket for r in reqs),
+            "deadline": deadline,
+        })
+
+    def _store_result(self, ticket: int, wid: int, value: np.ndarray) -> None:
+        self._results[ticket] = (wid, value)
+        while len(self._results) > self.cfg.max_results:
+            _, (old_wid, _) = self._results.popitem(last=False)
+            self._workloads[old_wid].results_evicted += 1

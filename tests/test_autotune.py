@@ -211,12 +211,30 @@ def test_autotune_reports_skipped_candidates(sidecar, monkeypatch):
 
     monkeypatch.setattr(autotune, "_time_plan", flaky)
     report: dict = {}
-    choice = autotune.autotune(SPEC, SHAPE, trials=1, report=report)
+    # single-image shape: scatter IS a candidate there (the batched-scatter
+    # exclusion below must not be what rejects it here)
+    choice = autotune.autotune(SPEC, (32, 32), trials=1, report=report)
     assert choice.backend != "scatter"
     rejected = [r["backend"] for r in report["skipped"]]
     assert "scatter" in rejected
     assert all("injected" in r["reason"] for r in report["skipped"]
                if r["backend"] == "scatter")
+
+
+def test_autotune_routes_batched_search_away_from_scatter(sidecar):
+    """Batched scatter on XLA-CPU is sublinear in B (index-stream length
+    scaling, BENCH batch_vs_b1.scatter 0.6-0.8x): the batched "auto" search
+    must exclude it — recorded in the skip report, never the winner — while
+    the single-image search still measures it."""
+    report: dict = {}
+    choice = autotune.autotune(SPEC, SHAPE, trials=1, report=report)
+    assert choice.backend != "scatter"
+    scatter_rows = [r for r in report["skipped"] if r["backend"] == "scatter"]
+    assert scatter_rows and "batched scatter" in scatter_rows[0]["reason"]
+    # unbatched: scatter competes (present in neither skip list nor banned)
+    report2: dict = {}
+    autotune.autotune(SPEC, (32, 32), trials=1, report=report2)
+    assert not any(r["backend"] == "scatter" for r in report2["skipped"])
 
 
 def test_autotune_crash_propagates(sidecar, monkeypatch):

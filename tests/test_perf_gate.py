@@ -1,0 +1,69 @@
+"""The perf ratchet's comparison logic (``benchmarks.perf_gate.gate``):
+regression detection, noise tolerance, and the loud failure when a
+benchmark adds a gated section without committing its baseline."""
+
+from benchmarks.perf_gate import gate
+
+
+def _payload(**sections):
+    return {"speedups": sections}
+
+
+def test_gate_passes_within_noise():
+    committed = _payload(batch_vs_b1={"onehot": {"B8": 1.6}})
+    fresh = _payload(batch_vs_b1={"onehot": {"B8": 1.2}})
+    regressions, report = gate(committed, fresh, noise=0.35)
+    assert regressions == []
+    assert any("OK" in line for line in report)
+
+
+def test_gate_fails_below_floor():
+    committed = _payload(batch_vs_b1={"onehot": {"B8": 1.6}})
+    fresh = _payload(batch_vs_b1={"onehot": {"B8": 0.9}})
+    regressions, _ = gate(committed, fresh, noise=0.35)
+    assert len(regressions) == 1 and "onehot/B8" in regressions[0]
+
+
+def test_gate_fails_on_metric_missing_from_fresh():
+    committed = _payload(batch_vs_b1={"onehot": {"B8": 1.6}})
+    regressions, _ = gate(committed, _payload(batch_vs_b1={}), noise=0.35)
+    assert regressions == ["batch_vs_b1/onehot/B8 (missing)"]
+
+
+def test_gate_fails_loudly_on_new_section_without_baseline():
+    """A benchmark adding a gated section without committing baseline
+    numbers must fail with the documented message — not KeyError, not a
+    silent not-gated pass."""
+    committed = _payload(batch_vs_b1={"onehot": {"B8": 1.6}})
+    fresh = _payload(
+        batch_vs_b1={"onehot": {"B8": 1.6}},
+        serve_continuous_vs_fixed={"load50/p99_latency_ratio": 3.0},
+    )
+    regressions, report = gate(committed, fresh, noise=0.35)
+    assert regressions == [
+        "serve_continuous_vs_fixed: new section missing from committed BENCH"
+    ]
+    assert any("missing from committed BENCH baseline" in line
+               for line in report)
+
+
+def test_gate_serve_section_ratchets_when_committed():
+    committed = _payload(
+        serve_continuous_vs_fixed={"load50/p99_latency_ratio": 3.0,
+                                   "full_load/throughput_ratio": 1.0},
+    )
+    fresh = _payload(
+        serve_continuous_vs_fixed={"load50/p99_latency_ratio": 1.5,
+                                   "full_load/throughput_ratio": 0.95},
+    )
+    regressions, _ = gate(committed, fresh, noise=0.35)
+    assert len(regressions) == 1
+    assert "p99_latency_ratio" in regressions[0]
+
+
+def test_gate_new_metric_in_existing_section_not_gated():
+    committed = _payload(batch_vs_b1={"onehot": {"B8": 1.6}})
+    fresh = _payload(batch_vs_b1={"onehot": {"B8": 1.6}, "native": {"B8": 2.0}})
+    regressions, report = gate(committed, fresh, noise=0.35)
+    assert regressions == []
+    assert any("new metric, not gated" in line for line in report)
