@@ -82,19 +82,28 @@ def gate(
             continue
         for key in sorted(base):
             if key not in new:
-                report.append(f"  {section}/{key}: missing from fresh run")
-                regressions.append(f"{section}/{key} (missing)")
+                report.append(
+                    f"  {section}/{key}: committed={base[key]:.3f} "
+                    f"fresh=(absent) — missing from fresh run"
+                )
+                regressions.append(
+                    f"{section}/{key} (missing): committed={base[key]:.3f} "
+                    f"but the fresh run produced no value"
+                )
                 continue
             floor = base[key] * (1.0 - noise)
+            ratio = new[key] / base[key] if base[key] else float("inf")
             status = "OK" if new[key] >= floor else "REGRESSION"
             report.append(
-                f"  {section}/{key}: committed={base[key]:.3f} "
-                f"fresh={new[key]:.3f} floor={floor:.3f} {status}"
+                f"  {section}/{key}: measured={new[key]:.3f} "
+                f"committed={base[key]:.3f} ratio={ratio:.2f}x "
+                f"floor={floor:.3f} {status}"
             )
             if new[key] < floor:
                 regressions.append(
-                    f"{section}/{key}: {new[key]:.3f} < floor {floor:.3f} "
-                    f"(committed {base[key]:.3f}, noise {noise:.0%})"
+                    f"{section}/{key}: measured={new[key]:.3f} vs "
+                    f"committed={base[key]:.3f} — ratio {ratio:.2f}x is "
+                    f"below floor {floor:.3f} (committed - {noise:.0%} noise)"
                 )
         for key in sorted(set(new) - set(base)):
             report.append(

@@ -9,6 +9,7 @@ perf trajectory can be compared across PRs. ``--out ''`` disables the file.
 """
 
 import argparse
+import inspect
 import json
 import os
 import platform
@@ -113,6 +114,9 @@ def main() -> None:
                     help="substring filter on module names")
     ap.add_argument("--out", default="BENCH_glcm.json",
                     help="machine-readable results path ('' disables)")
+    ap.add_argument("--trace", default="",
+                    help="Chrome-trace JSON path, forwarded to modules "
+                         "whose run() accepts trace= (serve_load)")
     args = ap.parse_args()
 
     common.reset_results()
@@ -123,8 +127,11 @@ def main() -> None:
             continue
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
         before = len(common.RESULTS)
+        kwargs = {}
+        if args.trace and "trace" in inspect.signature(mod.run).parameters:
+            kwargs["trace"] = args.trace
         t0 = time.time()
-        mod.run()
+        mod.run(**kwargs)
         dt = time.time() - t0
         modules_run[mod_name] = {
             "seconds": round(dt, 2),

@@ -34,12 +34,15 @@ the deadline must not tax the saturated regime), ratcheted by
 ``benchmarks.perf_gate``.
 """
 
+import argparse
+import sys
 import time
 
 import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.core.spec import GLCMSpec
+from repro.obs.trace import Tracer, set_tracer
 from repro.serve.engine import GLCMEngine, GLCMServeConfig
 
 SIZE = 64
@@ -94,7 +97,7 @@ class WarpClock:
             self.offset += t - now
 
 
-def _build_engine(max_wait_ms, clock=None) -> tuple[GLCMEngine, list[int]]:
+def _build_engine(max_wait_ms, clock=None, tracer=None) -> tuple[GLCMEngine, list[int]]:
     name0, spec0, shape0, _ = WORKLOADS[0]
     eng = GLCMEngine(
         GLCMServeConfig(
@@ -102,6 +105,7 @@ def _build_engine(max_wait_ms, clock=None) -> tuple[GLCMEngine, list[int]]:
             max_wait_ms=max_wait_ms, max_results=100_000,
         ),
         clock=clock,
+        tracer=tracer,
     )
     wids = [0]
     for name, spec, shape, _ in WORKLOADS[1:]:
@@ -115,25 +119,42 @@ def _inputs(seed: int = 1) -> list[np.ndarray]:
     return [rng.random(shape, np.float32) * 255 for _, _, shape, _ in WORKLOADS]
 
 
-def replay(max_wait_ms, trace, unit_s: float, inputs) -> tuple[dict, dict]:
+def replay(max_wait_ms, trace, unit_s: float, inputs,
+           trace_out: str = "") -> tuple[dict, dict]:
     """Event-driven trace replay → ({p50, p95, p99, mean, n, throughput},
-    engine stats)."""
+    engine stats).  With ``trace_out`` set, the replay runs under a tracer
+    sharing the warp clock (so span timestamps live on the simulated
+    timeline) and writes Chrome-trace JSON there at the end — load it in
+    Perfetto / chrome://tracing."""
     clock = WarpClock()
-    eng, wids = _build_engine(max_wait_ms, clock=clock)
-    start = clock()
-    due = start
-    for gap, w, prio in trace:
-        due += gap * unit_s
-        # fire every deadline that falls before the next arrival
-        while True:
-            nd = eng.next_deadline()
-            if nd is None or nd > due:
-                break
-            clock.jump_to(nd)
-            eng.poll()
-        clock.jump_to(due)
-        eng.submit(inputs[w], workload=wids[w], priority=prio)
-    eng.flush()                      # trace over: drain stragglers now
+    tracer = prev = None
+    if trace_out:
+        # Install globally too, so plan-cache/compile spans from layers that
+        # consult get_tracer() land on the same timeline as engine spans.
+        tracer = Tracer(enabled=True, clock=clock)
+        prev = set_tracer(tracer)
+    try:
+        eng, wids = _build_engine(max_wait_ms, clock=clock, tracer=tracer)
+        start = clock()
+        due = start
+        for gap, w, prio in trace:
+            due += gap * unit_s
+            # fire every deadline that falls before the next arrival
+            while True:
+                nd = eng.next_deadline()
+                if nd is None or nd > due:
+                    break
+                clock.jump_to(nd)
+                eng.poll()
+            clock.jump_to(due)
+            eng.submit(inputs[w], workload=wids[w], priority=prio)
+        eng.flush()                      # trace over: drain stragglers now
+    finally:
+        if tracer is not None:
+            set_tracer(prev)
+    if tracer is not None:
+        tracer.save_chrome(trace_out)
+        print(f"# wrote {len(tracer)} spans to {trace_out}", file=sys.stderr)
     span = clock() - start
     lat = np.concatenate([eng.latencies(w, "e2e") for w in wids])
     p50, p95, p99 = np.percentile(lat, (50.0, 95.0, 99.0))
@@ -147,7 +168,8 @@ def replay(max_wait_ms, trace, unit_s: float, inputs) -> tuple[dict, dict]:
     )
 
 
-def run(n_requests: int = 240) -> None:
+def run(n_requests: int = 240, trace: str = "") -> None:
+    trace_out = trace  # `trace` below is the ARRIVAL trace; this is the path
     # Per-workload plan capacity (informational rows)…
     eng, wids = _build_engine(None)
     for (name, _, shape, share), wid in zip(WORKLOADS, wids):
@@ -175,7 +197,11 @@ def run(n_requests: int = 240) -> None:
     for load in (0.5, 1.0):
         unit_s = mean_service_s / load
         for mode, wait in (("continuous", max_wait_ms), ("fixed", None)):
-            r, st = replay(wait, trace, unit_s, inputs)
+            # --trace captures the continuous 50%-load replay: the regime
+            # where partial batches, deadline fires, and queue waits are
+            # all visible in one span tree per request.
+            capture = trace_out if (mode, load) == ("continuous", 0.5) else ""
+            r, st = replay(wait, trace, unit_s, inputs, trace_out=capture)
             results[(mode, load)] = r
             deadline = sum(w["deadline_dispatches"]
                            for w in st["workloads"].values())
@@ -207,5 +233,19 @@ def run(n_requests: int = 240) -> None:
              serve_metric=metric, ratio=value)
 
 
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Bursty mixed-spec serving load benchmark."
+    )
+    ap.add_argument("--requests", type=int, default=240,
+                    help="arrival-trace length")
+    ap.add_argument("--trace", default="",
+                    help="write Chrome-trace JSON of the continuous "
+                         "50%%-load replay here (open in Perfetto)")
+    args = ap.parse_args(argv)
+    run(n_requests=args.requests, trace=args.trace)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

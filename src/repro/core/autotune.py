@@ -49,6 +49,8 @@ import numpy as np
 
 from repro.core import backends as _backends
 from repro.core.spec import GLCMSpec
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 
 __all__ = [
     "TunedChoice",
@@ -70,6 +72,13 @@ KNOB_DEFAULTS = {
     "slab_d": None,
     "batch_mode": "auto",
 }
+
+# µs-scale bucket ladder for per-candidate runtimes (the default registry
+# buckets are ms-scale; a candidate measurement is 50µs–1s).
+_US_BUCKETS = (
+    50.0, 100.0, 250.0, 500.0, 1e3, 2.5e3, 5e3, 1e4, 2.5e4, 5e4, 1e5,
+    2.5e5, 1e6, float("inf"),
+)
 
 _LOCK = threading.Lock()
 # path-str → {key: entry}; per-path so tests with REPRO_AUTOTUNE_PATH
@@ -291,6 +300,9 @@ def autotune(
 
     shape = tuple(int(s) for s in shape)
     require = tuple(require)
+    tr = _obs_trace.get_tracer()
+    t_run0 = tr.clock() if tr.enabled else 0.0
+    hist_us = _obs_metrics.get_registry().histogram
     x = _sample_input(spec, shape)
     measured: list[tuple[float, str, dict]] = []
     skipped: list[dict] = []
@@ -316,6 +328,7 @@ def autotune(
                 print(f"  {name}: skipped (batched scatter on cpu)")
             continue
         for knobs in _candidates(spec, shape, name):
+            t_cand0 = tr.clock() if tr.enabled else 0.0
             try:
                 cand = spec.replace(scheme=name, **knobs)
                 p = _plan.compile_plan(
@@ -329,9 +342,20 @@ def autotune(
                     {"backend": name, "knobs": dict(knobs),
                      "reason": f"{type(exc).__name__}: {exc}"}
                 )
+                if tr.enabled:
+                    tr.event("autotune.skipped", backend=name,
+                             knobs=str(dict(knobs)),
+                             reason=type(exc).__name__)
                 if verbose:
                     print(f"  {name} {knobs}: skipped ({exc})")
                 continue
+            hist_us("repro_autotune_candidate_us",
+                    "per-candidate median plan runtime (us)",
+                    buckets=_US_BUCKETS, backend=name).observe(us)
+            if tr.enabled:
+                tr.add_span("autotune.candidate", t_cand0, tr.clock(),
+                            backend=name, knobs=str(dict(knobs)),
+                            us=round(us, 1))
             if verbose:
                 print(f"  {name} {knobs}: {us:.0f} us")
             measured.append((us, name, knobs))
@@ -350,6 +374,10 @@ def autotune(
         snapshot = dict(table)
     if persist:
         _save(snapshot)
+    if tr.enabled:
+        tr.add_span("autotune.run", t_run0, tr.clock(), winner=name,
+                    knobs=str(dict(knobs)), us=round(us, 1),
+                    candidates=len(measured), skipped=len(skipped))
     return TunedChoice(backend=name, knobs=tuple(sorted(knobs.items())))
 
 

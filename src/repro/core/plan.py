@@ -75,6 +75,7 @@ import collections
 import dataclasses
 import os
 import threading
+import time
 from collections.abc import Callable
 
 import jax
@@ -91,6 +92,8 @@ from repro.core.quantize import (
 )
 from repro.core.spec import GLCMSpec
 from repro.core.stream_state import GLCMStreamPlan
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 
 __all__ = [
     "GLCMPlan",
@@ -259,6 +262,24 @@ def _cache_put(key, plan):
     return plan
 
 
+def _note_compile(resolved: GLCMSpec, shape, kind: str, t_build: float,
+                  t_build_tr: float) -> None:
+    """Record one plan-cache miss: miss counter, compile-ms histogram, and
+    (tracing on) a ``plan.compile`` span."""
+    ms = (time.perf_counter() - t_build) * 1e3
+    reg = _obs_metrics.get_registry()
+    reg.counter("repro_plan_cache_lookups_total",
+                "plan-cache lookups by result", result="miss").inc()
+    reg.histogram("repro_plan_compile_ms",
+                  "plan build time on cache miss (ms)",
+                  scheme=resolved.scheme).observe(ms)
+    tr = _obs_trace.get_tracer()
+    if tr.enabled:
+        tr.add_span("plan.compile", t_build_tr, tr.clock(),
+                    scheme=resolved.scheme, shape=str(tuple(shape)),
+                    kind=kind, ms=round(ms, 3))
+
+
 def _ensure_linted(plan: GLCMPlan) -> GLCMPlan:
     """Lint ``plan`` once, cache the verdict on the entry, raise on findings.
 
@@ -270,7 +291,18 @@ def _ensure_linted(plan: GLCMPlan) -> GLCMPlan:
     if plan.lint is None:
         from repro.analysis import jaxpr_lint  # late: analysis imports plan
 
+        tr = _obs_trace.get_tracer()
+        t_tr = tr.clock() if tr.enabled else 0.0
+        t0 = time.perf_counter()
         findings = tuple(jaxpr_lint.lint_plan(plan))
+        lint_ms = (time.perf_counter() - t0) * 1e3
+        _obs_metrics.get_registry().histogram(
+            "repro_plan_lint_ms", "plan-contract lint time (ms)",
+            scheme=plan.spec.scheme).observe(lint_ms)
+        if tr.enabled:
+            tr.add_span("plan.lint", t_tr, tr.clock(),
+                        scheme=plan.spec.scheme, findings=len(findings),
+                        ms=round(lint_ms, 3))
         object.__setattr__(plan, "lint", findings)
     if plan.lint:
         from repro.analysis import jaxpr_lint
@@ -362,8 +394,21 @@ def compile_plan(
         if plan is not None:
             _CACHE.move_to_end(key)
             _STATS["hits"] += 1
+    tracer = _obs_trace.get_tracer()
     if plan is not None:
+        _obs_metrics.get_registry().counter(
+            "repro_plan_cache_lookups_total", "plan-cache lookups by result",
+            result="hit").inc()
+        if tracer.enabled:
+            tracer.event("plan.cache_hit", scheme=plan.spec.scheme,
+                         shape=str(shape))
         return _ensure_linted(plan) if check == "lint" else plan
+
+    # Cache miss: time the plan build (backend resolution + validation +
+    # program construction + jit wrapping — XLA compilation itself is lazy,
+    # on first execution) for the compile span/histogram.
+    t_build_tr = tracer.clock() if tracer.enabled else 0.0
+    t_build = time.perf_counter()
 
     if tuned is not None:
         name = tuned.backend
@@ -469,6 +514,7 @@ def compile_plan(
             tail_fn=tail, grid=grid, fused_quantize=fused,
             host_native=backend.caps.host_native, tuned=tuned,
         )
+        _note_compile(resolved, shape, "stream", t_build, t_build_tr)
         plan = _cache_put(key, plan)
         return _ensure_linted(plan) if check == "lint" else plan
 
@@ -546,5 +592,6 @@ def compile_plan(
         fn=fn, grid=grid, fused_quantize=fused, host_native=host,
         tuned=tuned,
     )
+    _note_compile(resolved, shape, "plan", t_build, t_build_tr)
     plan = _cache_put(key, plan)
     return _ensure_linted(plan) if check == "lint" else plan

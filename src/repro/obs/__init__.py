@@ -1,0 +1,44 @@
+"""Observability substrate: tracing spans, a metrics registry, and a
+flight recorder, threaded through compile_plan / autotune / GLCMEngine.
+
+Three small, dependency-free pieces (nothing here imports the rest of the
+repo, so every layer can import ``repro.obs`` without cycles):
+
+* :mod:`repro.obs.trace` — a thread-safe :class:`Tracer` of nested spans
+  with an injectable monotonic clock, a bounded ring buffer, and Chrome
+  ``trace_event`` JSON export (loadable in Perfetto / ``chrome://tracing``).
+  Disabled by default with a measured no-op fast path; enable with
+  ``REPRO_TRACE=1`` or by injecting a live tracer.
+* :mod:`repro.obs.metrics` — labeled counters / gauges / histograms with
+  Prometheus text exposition and a JSON snapshot.
+* :mod:`repro.obs.recorder` — a bounded ring of recent dispatch records,
+  dumped on :class:`~repro.serve.engine.QueueFullError` or dispatch
+  exceptions for post-mortem.
+
+``python -m repro.obs.report trace.json`` summarizes a captured trace
+(per-phase breakdown, top spans, dispatch timeline, per-request span
+trees) and converts/validates Chrome-trace JSON.
+"""
+
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    get_registry,
+)
+from repro.obs.recorder import FlightRecorder
+from repro.obs.trace import Span, Tracer, get_tracer, set_tracer
+
+__all__ = [
+    "Counter",
+    "FlightRecorder",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Span",
+    "Tracer",
+    "get_registry",
+    "get_tracer",
+    "set_tracer",
+]

@@ -32,10 +32,26 @@ job is to keep launches *full and frequent* under real traffic:
   beyond it ``submit`` sheds the request with :class:`QueueFullError` and
   the shed is counted in ``stats()``.
 * **Observability.**  ``stats()`` reports, per workload: queue depth,
-  p50/p95/p99 queue/service/end-to-end latency, a batch-occupancy
+  p50/p95/p99 queue/service/end-to-end latency, a per-phase breakdown
+  (pad / launch / readback — the launch boundary is device-synced via
+  ``block_until_ready``, so device time is real), a batch-occupancy
   histogram, shed and result-eviction counters — plus the engine-wide
   plan-cache hit rate.  ``dispatch_log`` keeps the last dispatches for
-  inspection.
+  inspection.  Counters/gauges/latency histograms also stream into the
+  process-global :mod:`repro.obs.metrics` registry (Prometheus text via
+  ``get_registry().to_prometheus()``).
+* **Tracing.**  With a live :class:`repro.obs.trace.Tracer` (inject via
+  ``GLCMEngine(..., tracer=...)``, install globally with
+  ``set_tracer``, or set ``REPRO_TRACE=1``), every request becomes one
+  span tree under its ticket correlation id — ``glcm.request`` →
+  queue_wait / pad / launch / readback — plus per-batch
+  ``glcm.dispatch`` spans, exportable as Perfetto-loadable Chrome JSON
+  (``tracer.save_chrome``).  Tracing off is a single attribute check on
+  the dispatch path.
+* **Flight recorder.**  ``engine.flight`` keeps a bounded ring of recent
+  dispatch/shed records; on :class:`QueueFullError` or a dispatch
+  exception the ring is dumped to ``engine.last_incident`` (and to
+  ``REPRO_FLIGHT_DIR`` when set) for post-mortem without tracing on.
 
 Results are held in a BOUNDED store (``max_results``): tickets never
 retrieved evict oldest-first (counted per workload) instead of growing
@@ -57,6 +73,9 @@ import numpy as np
 
 from repro.core.spec import GLCMSpec
 from repro.models import build_model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.recorder import FlightRecorder
 
 
 @dataclasses.dataclass
@@ -259,6 +278,35 @@ class _Workload:
         self.queue_ms: collections.deque = collections.deque(maxlen=stats_window)
         self.service_ms: collections.deque = collections.deque(maxlen=stats_window)
         self.e2e_ms: collections.deque = collections.deque(maxlen=stats_window)
+        # per-phase dispatch breakdown (one sample per batch, ms)
+        self.pad_ms: collections.deque = collections.deque(maxlen=stats_window)
+        self.launch_ms: collections.deque = collections.deque(maxlen=stats_window)
+        self.readback_ms: collections.deque = collections.deque(maxlen=stats_window)
+        # cached metrics-registry handles: the dispatch path pays one
+        # inc()/observe(), never a registry lookup
+        reg = obs_metrics.get_registry()
+        self.m_submitted = reg.counter(
+            "repro_serve_submitted_total", "requests accepted by submit()",
+            workload=name)
+        self.m_served = reg.counter(
+            "repro_serve_served_total", "requests completed", workload=name)
+        self.m_shed = reg.counter(
+            "repro_serve_shed_total", "requests shed by backpressure",
+            workload=name)
+        self.m_batches = reg.counter(
+            "repro_serve_batches_total", "batches dispatched", workload=name)
+        self.m_deadline = reg.counter(
+            "repro_serve_deadline_dispatches_total",
+            "partial batches launched by deadline expiry", workload=name)
+        self.m_queue_depth = reg.gauge(
+            "repro_serve_queue_depth", "requests currently queued",
+            workload=name)
+        self.m_phase = {
+            phase: reg.histogram(
+                "repro_serve_phase_ms", "dispatch phase latency (ms)",
+                workload=name, phase=phase)
+            for phase in ("queue", "pad", "launch", "readback")
+        }
 
 
 class GLCMEngine:
@@ -319,12 +367,22 @@ class GLCMEngine:
     shape and coexist with the continuous batch traffic.
     """
 
-    def __init__(self, cfg: GLCMServeConfig = GLCMServeConfig(), *, clock=None):
+    def __init__(self, cfg: GLCMServeConfig = GLCMServeConfig(), *, clock=None,
+                 tracer=None):
         from repro.core.plan import compile_plan
 
         self.cfg = cfg
         self.spec = cfg.glcm_spec()
         self._clock = clock if clock is not None else time.monotonic
+        # Observability: injected tracer (default = the process-global one,
+        # disabled unless REPRO_TRACE=1 / set_tracer) and the always-on
+        # flight recorder, both on the engine's own clock.
+        self.tracer = tracer if tracer is not None else obs_trace.get_tracer()
+        self.flight = FlightRecorder(capacity=256, clock=self._clock)
+        self.last_incident: dict | None = None
+        self._m_frames = obs_metrics.get_registry().counter(
+            "repro_serve_frames_streamed_total",
+            "video frames consumed by stream sessions")
         self._workloads: dict[int, _Workload] = {}
         self._next_workload = 0
         self.register(
@@ -510,12 +568,20 @@ class GLCMEngine:
             raise KeyError(f"stream {stream_id} is unknown or closed")
         frame = self._validate_request(
             frame, kind="frame", want=tuple(self.cfg.image_shape))
+        t0 = self._clock()
         state, out = self.stream_plan.update(
             self._streams[stream_id], jnp.asarray(frame)
         )
+        result = np.asarray(out)
         self._streams[stream_id] = state
         self.frames_streamed += 1
-        return np.asarray(out)
+        self._m_frames.inc()
+        if self.tracer.enabled:
+            self.tracer.add_span(
+                "glcm.stream_push", t0, self._clock(),
+                corr=f"stream-{stream_id}", stream=stream_id,
+                frames_seen=self.frames_streamed)
+        return result
 
     def close_stream(self, stream_id: int):
         """Retire the session, returning its final ``GLCMStreamState`` (feed
@@ -544,6 +610,15 @@ class GLCMEngine:
         if (w.max_queue_depth is not None
                 and len(w.queue) >= w.max_queue_depth):
             w.shed += 1
+            w.m_shed.inc()
+            # Post-mortem: dump the flight ring so "what led up to the
+            # overload" is answerable without tracing having been on.
+            self.flight.record(
+                "shed", workload=w.wid, name=w.name,
+                queue_depth=len(w.queue), sheds=w.shed)
+            self.last_incident = self.flight.dump(
+                reason=f"QueueFullError: workload {w.wid} ({w.name}) at "
+                       f"max_queue_depth={w.max_queue_depth}")
             raise QueueFullError(
                 f"workload {w.wid} ({w.name}): queue is at "
                 f"max_queue_depth={w.max_queue_depth}; request shed "
@@ -553,7 +628,13 @@ class GLCMEngine:
         self._next_ticket += 1
         w.queue.append(_Request(ticket, image, priority, self._clock()))
         w.submitted += 1
+        w.m_submitted.inc()
+        w.m_queue_depth.set(len(w.queue))
         self._pending_wid[ticket] = w.wid
+        if self.tracer.enabled:
+            # the correlation id of this request's whole span tree
+            self.tracer.event("glcm.submit", ticket=ticket, workload=w.name,
+                              priority=priority)
         self.poll()
         return ticket
 
@@ -676,6 +757,10 @@ class GLCMEngine:
                 "queue_ms": _percentiles(w.queue_ms),
                 "service_ms": _percentiles(w.service_ms),
                 "e2e_ms": _percentiles(w.e2e_ms),
+                # per-phase dispatch breakdown (one sample per batch)
+                "pad_ms": _percentiles(w.pad_ms),
+                "launch_ms": _percentiles(w.launch_ms),
+                "readback_ms": _percentiles(w.readback_ms),
             }
         return {
             "batches_dispatched": self.batches_dispatched,
@@ -684,6 +769,8 @@ class GLCMEngine:
             "results_held": len(self._results),
             "open_streams": len(self._streams),
             "paused": self._paused,
+            "flight_records": len(self.flight),
+            "incidents": self.flight.dumps,
             "plan_cache": plan_cache_stats(),
             "workloads": per,
         }
@@ -729,20 +816,58 @@ class GLCMEngine:
         reqs = self._take(w, n, now, deadline)
         k = len(reqs)
         bucket = pick_bucket(w.buckets, k)
-        stack, _ = pad_stack([r.image for r in reqs], bucket)
-        t_disp = self._clock()
-        out = np.asarray(self._plan_for(w, bucket)(jnp.asarray(stack)))
+        # Phase boundaries (engine clock): pad → launch → readback.  The
+        # launch boundary is a real device sync (block_until_ready), so the
+        # launch/readback split — and any trace span built from it — is
+        # device time, not dispatch-return time; on an async backend
+        # np.asarray would have blocked there anyway, so the untraced path
+        # pays nothing extra.
+        t_pad0 = self._clock()
+        try:
+            plan = self._plan_for(w, bucket)
+            stack, _ = pad_stack([r.image for r in reqs], bucket)
+            t_disp = self._clock()
+            out_dev = plan(jnp.asarray(stack))
+            jax.block_until_ready(out_dev)
+            t_launch = self._clock()
+            out = np.asarray(out_dev)
+        except Exception as exc:
+            # Post-mortem before propagating: the flight ring holds the
+            # dispatches leading up to the failure.
+            self.flight.record(
+                "dispatch_error", workload=w.wid, name=w.name,
+                bucket=bucket, occupancy=k,
+                tickets=[r.ticket for r in reqs],
+                error=f"{type(exc).__name__}: {exc}")
+            self.last_incident = self.flight.dump(
+                reason=f"dispatch error in workload {w.wid} ({w.name}): "
+                       f"{type(exc).__name__}: {exc}")
+            raise
         t_done = self._clock()
+        pad_ms = (t_disp - t_pad0) * 1e3
+        launch_ms = (t_launch - t_disp) * 1e3
+        readback_ms = (t_done - t_launch) * 1e3
         for i, r in enumerate(reqs):
             self._pending_wid.pop(r.ticket, None)
             self._store_result(r.ticket, w.wid, out[i])
             w.queue_ms.append((t_disp - r.submitted_at) * 1e3)
             w.service_ms.append((t_done - t_disp) * 1e3)
             w.e2e_ms.append((t_done - r.submitted_at) * 1e3)
+            w.m_phase["queue"].observe((t_disp - r.submitted_at) * 1e3)
+        w.pad_ms.append(pad_ms)
+        w.launch_ms.append(launch_ms)
+        w.readback_ms.append(readback_ms)
+        w.m_phase["pad"].observe(pad_ms)
+        w.m_phase["launch"].observe(launch_ms)
+        w.m_phase["readback"].observe(readback_ms)
         w.batches += 1
         w.served += k
+        w.m_batches.inc()
+        w.m_served.inc(k)
         if deadline:
             w.deadline_dispatches += 1
+            w.m_deadline.inc()
+        w.m_queue_depth.set(len(w.queue))
         w.occupancy.setdefault(bucket, {})
         w.occupancy[bucket][k] = w.occupancy[bucket].get(k, 0) + 1
         self.batches_dispatched += 1
@@ -752,6 +877,41 @@ class GLCMEngine:
             "tickets": tuple(r.ticket for r in reqs),
             "deadline": deadline,
         })
+        self.flight.record(
+            "dispatch", workload=w.wid, name=w.name, bucket=bucket,
+            occupancy=k, deadline=deadline, queue_depth=len(w.queue),
+            pad_ms=round(pad_ms, 3), launch_ms=round(launch_ms, 3),
+            readback_ms=round(readback_ms, 3))
+        tr = self.tracer
+        if tr.enabled:
+            # One batch-level span tree on the engine's track…
+            sid = tr.add_span(
+                "glcm.dispatch", t_pad0, t_done, workload=w.name,
+                bucket=bucket, occupancy=k, deadline=deadline,
+                backend=plan.spec.scheme)
+            tr.add_span("glcm.pad", t_pad0, t_disp, parent=sid,
+                        workload=w.name)
+            tr.add_span("glcm.launch", t_disp, t_launch, parent=sid,
+                        workload=w.name, backend=plan.spec.scheme,
+                        synced=True)
+            tr.add_span("glcm.readback", t_launch, t_done, parent=sid,
+                        workload=w.name)
+            # …and one span tree per request under its ticket correlation
+            # id: the request's whole life, submit() to result ready.
+            for r in reqs:
+                root = tr.add_span(
+                    "glcm.request", r.submitted_at, t_done, corr=r.ticket,
+                    ticket=r.ticket, workload=w.name, priority=r.priority,
+                    bucket=bucket, occupancy=k, deadline=deadline)
+                tr.add_span("glcm.queue_wait", r.submitted_at, t_pad0,
+                            parent=root, corr=r.ticket)
+                tr.add_span("glcm.pad", t_pad0, t_disp, parent=root,
+                            corr=r.ticket)
+                tr.add_span("glcm.launch", t_disp, t_launch, parent=root,
+                            corr=r.ticket, backend=plan.spec.scheme,
+                            synced=True)
+                tr.add_span("glcm.readback", t_launch, t_done, parent=root,
+                            corr=r.ticket)
 
     def _store_result(self, ticket: int, wid: int, value: np.ndarray) -> None:
         self._results[ticket] = (wid, value)

@@ -1,0 +1,397 @@
+"""Observability primitives (``repro.obs``): tracer span trees, ring
+bounds, thread safety, the disabled no-op fast path and its measured
+overhead, the metrics registry's Prometheus/JSON exposition, the flight
+recorder, and the Chrome-trace structural validator."""
+
+import json
+import threading
+import time
+
+import pytest
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.recorder import FlightRecorder
+from repro.obs.report import load_trace, validate_chrome
+from repro.obs.trace import Tracer, get_tracer, set_tracer
+
+
+class StepClock:
+    """Deterministic clock: every read advances by ``step`` seconds."""
+
+    def __init__(self, step=0.001):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self):
+        self.t += self.step
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# tracer: recording semantics
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_tracer_records_nothing_and_shares_noop():
+    tr = Tracer(enabled=False)
+    cm1 = tr.span("a", key=1)
+    cm2 = tr.span("b")
+    assert cm1 is cm2, "disabled span() must return one shared no-op object"
+    with cm1 as sp:
+        sp.set(extra=2)
+    assert tr.add_span("x", 0.0, 1.0) == 0
+    assert tr.event("y") == 0
+    assert len(tr) == 0
+
+
+def test_nested_spans_build_parent_links_and_attrs():
+    tr = Tracer(enabled=True, clock=StepClock())
+    with tr.span("outer", workload="w") as outer:
+        with tr.span("inner") as inner:
+            inner.set(bucket=4)
+    spans = {s.name: s for s in tr.spans()}
+    assert spans["inner"].parent == spans["outer"].id
+    assert spans["outer"].parent is None
+    assert spans["outer"].attrs == {"workload": "w"}
+    assert spans["inner"].attrs == {"bucket": 4}
+    # inner closed first → recorded first; durations strictly positive
+    assert [s.name for s in tr.spans()] == ["inner", "outer"]
+    assert all(s.dur > 0 for s in tr.spans())
+
+
+def test_span_exception_records_error_attr_and_propagates():
+    tr = Tracer(enabled=True, clock=StepClock())
+    with pytest.raises(ValueError, match="boom"):
+        with tr.span("failing"):
+            raise ValueError("boom")
+    (span,) = tr.spans()
+    assert span.attrs["error"] == "ValueError: boom"
+
+
+def test_add_span_builds_trees_from_explicit_timestamps():
+    tr = Tracer(enabled=True)
+    root = tr.add_span("glcm.request", 1.0, 2.0, corr=42, workload="w")
+    child = tr.add_span("glcm.launch", 1.2, 1.8, parent=root, corr=42)
+    assert root and child and root != child
+    by_name = {s.name: s for s in tr.spans()}
+    assert by_name["glcm.launch"].parent == root
+    assert by_name["glcm.request"].corr == 42
+    assert by_name["glcm.request"].dur == pytest.approx(1.0)
+
+
+def test_event_is_instant_and_parented_to_open_span():
+    tr = Tracer(enabled=True, clock=StepClock())
+    with tr.span("outer") as outer:
+        tr.event("tick", ticket=7)
+    ev = next(s for s in tr.spans() if s.name == "tick")
+    assert ev.instant and ev.dur == 0.0
+    assert ev.parent == outer.id
+
+
+def test_ring_buffer_wraps_and_counts_drops():
+    tr = Tracer(enabled=True, capacity=4)
+    for i in range(10):
+        tr.add_span(f"s{i}", float(i), float(i) + 0.5)
+    assert len(tr) == 4
+    assert tr.dropped == 6
+    assert [s.name for s in tr.spans()] == ["s6", "s7", "s8", "s9"]
+    tr.clear()
+    assert len(tr) == 0 and tr.dropped == 0
+
+
+def test_tracer_is_thread_safe_and_nesting_is_per_thread():
+    tr = Tracer(enabled=True, capacity=10_000)
+    errors = []
+
+    def worker(tag):
+        try:
+            for i in range(100):
+                with tr.span(f"{tag}-outer"):
+                    with tr.span(f"{tag}-inner", i=i):
+                        pass
+        except Exception as exc:  # pragma: no cover - diagnostic
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(f"t{k}",), name=f"t{k}")
+               for k in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    spans = tr.spans()
+    assert len(spans) == 8 * 100 * 2
+    by_id = {s.id: s for s in spans}
+    for s in spans:
+        if s.parent is not None:
+            # parent must be the SAME thread's outer span, never another
+            # thread's (the open-span stack is thread-local)
+            assert by_id[s.parent].tid == s.tid
+
+
+def test_set_tracer_swaps_global_and_returns_previous():
+    mine = Tracer(enabled=True)
+    prev = set_tracer(mine)
+    try:
+        assert get_tracer() is mine
+    finally:
+        assert set_tracer(prev) is mine
+    assert get_tracer() is prev
+
+
+# ---------------------------------------------------------------------------
+# tracer: export formats
+# ---------------------------------------------------------------------------
+
+
+def _sample_tracer() -> Tracer:
+    tr = Tracer(enabled=True)
+    root = tr.add_span("glcm.request", 1.0, 1.010, corr=3, workload="w")
+    tr.add_span("glcm.launch", 1.002, 1.008, parent=root, corr=3)
+    tr.add_span("glcm.dispatch", 1.001, 1.009, bucket=4)
+    tr.event("glcm.submit", ticket=3)
+    return tr
+
+
+def test_native_export_roundtrips_through_report_loader(tmp_path):
+    tr = _sample_tracer()
+    path = tmp_path / "trace.json"
+    tr.save(str(path))
+    doc = json.loads(path.read_text())
+    assert doc["format"] == "repro-trace-v1"
+    assert min(s["ts_us"] for s in doc["spans"]) == 0.0  # relative time
+    spans = load_trace(str(path))
+    by_name = {s.name: s for s in spans}
+    assert by_name["glcm.request"].corr == 3
+    assert by_name["glcm.launch"].parent == by_name["glcm.request"].id
+    assert by_name["glcm.request"].dur_us == pytest.approx(10_000, rel=1e-3)
+
+
+def test_chrome_export_is_valid_and_preserves_trees(tmp_path):
+    tr = _sample_tracer()
+    doc = tr.to_chrome()
+    assert validate_chrome(doc) == []
+    phases = [e["ph"] for e in doc["traceEvents"]]
+    assert "X" in phases and "b" in phases and "e" in phases and "i" in phases
+    assert any(e["ph"] == "M" and e["name"] == "process_name"
+               for e in doc["traceEvents"])
+    # round trip: request trees survive via args.span_id/parent_id/corr
+    path = tmp_path / "chrome.json"
+    tr.save_chrome(str(path))
+    spans = load_trace(str(path))
+    by_name = {s.name: s for s in spans}
+    assert by_name["glcm.launch"].parent == by_name["glcm.request"].id
+    assert str(by_name["glcm.request"].corr) == "3"
+
+
+def test_chrome_events_sorted_by_timestamp():
+    tr = Tracer(enabled=True)
+    tr.add_span("late", 5.0, 6.0)
+    tr.add_span("early", 1.0, 2.0)
+    ts = [e["ts"] for e in tr.to_chrome()["traceEvents"] if e["ph"] != "M"]
+    assert ts == sorted(ts)
+
+
+# ---------------------------------------------------------------------------
+# tracer: disabled fast path overhead
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_tracer_dispatch_overhead_under_two_percent():
+    """Traced-off dispatch must cost <2% over a tracer-free build.
+
+    Subtracting two timed dispatch loops is noise-dominated (the plan
+    call itself jitters a few percent run-to-run, while the real no-op
+    cost is ~0.03% of a dispatch), so measure the two terms directly:
+    the per-dispatch instrumentation cost (the engine's exact traced-off
+    sequence — one no-op ``span()`` plus the ``enabled`` guards on the
+    retrospective recording) in a tight loop, and the dispatch cost as a
+    min-of-rounds, then bound their ratio."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.plan import compile_plan
+    from repro.core.spec import GLCMSpec
+
+    # A dispatch-sized workload (a padded bucket of 8 images, two offset
+    # pairs): the 2% bound is about the engine's per-DISPATCH overhead,
+    # so the denominator must be a realistic dispatch, not a toy call.
+    plan = compile_plan(
+        GLCMSpec(levels=16, pairs=((1, 0), (1, 45))), (8, 64, 64))
+    x = jnp.asarray(
+        np.random.default_rng(0).integers(0, 16, (8, 64, 64), np.int32))
+    jax.block_until_ready(plan(x))  # compile outside the timed region
+
+    tr = Tracer(enabled=False)
+
+    def instrumentation_only():
+        # exactly what one traced-off dispatch adds: a no-op span and the
+        # guards in front of every retrospective add_span/event call
+        with tr.span("glcm.dispatch", workload="w"):
+            pass
+        if tr.enabled:
+            tr.add_span("glcm.request", 0.0, 1.0, corr=1)
+        if tr.enabled:
+            tr.event("glcm.submit", ticket=1)
+
+    n = 20_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        instrumentation_only()
+    per_dispatch_overhead = (time.perf_counter() - t0) / n
+
+    def time_round(inner=10):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            jax.block_until_ready(plan(x))
+        return (time.perf_counter() - t0) / inner
+
+    time_round(1)  # warm
+    dispatch_cost = min(time_round() for _ in range(5))
+
+    assert len(tr) == 0, "disabled tracer must have recorded nothing"
+    ratio = per_dispatch_overhead / dispatch_cost
+    assert ratio < 0.02, (
+        f"traced-off instrumentation costs {per_dispatch_overhead * 1e6:.2f} us "
+        f"per dispatch = {ratio:.3%} of a {dispatch_cost * 1e3:.2f} ms "
+        f"dispatch (bound: 2%)")
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("reqs_total", "requests", workload="a")
+    c.inc()
+    c.inc(2)
+    assert c.value == 3
+    with pytest.raises(ValueError, match="only go up"):
+        c.inc(-1)
+    assert reg.counter("reqs_total", workload="a") is c  # get-or-create
+    assert reg.counter("reqs_total", workload="b") is not c
+
+    g = reg.gauge("depth")
+    g.set(5)
+    g.inc()
+    g.dec(2)
+    assert g.value == 4
+
+    h = reg.histogram("lat_ms", buckets=(1.0, 10.0))
+    for v in (0.5, 5.0, 50.0):
+        h.observe(v)
+    assert h.count == 3 and h.sum == pytest.approx(55.5)
+    assert h.cumulative() == [(1.0, 1), (10.0, 2), (float("inf"), 3)]
+
+
+def test_histogram_boundary_value_counts_in_le_bucket():
+    reg = MetricsRegistry()
+    h = reg.histogram("h", buckets=(1.0, 10.0))
+    h.observe(1.0)  # le="1" means <= 1.0: boundary lands IN the bucket
+    assert h.cumulative()[0] == (1.0, 1)
+
+
+def test_metric_type_conflict_raises():
+    reg = MetricsRegistry()
+    reg.counter("x_total")
+    with pytest.raises(ValueError, match="is a counter"):
+        reg.gauge("x_total")
+
+
+def test_bad_histogram_buckets_raise():
+    with pytest.raises(ValueError, match="ascending"):
+        MetricsRegistry().histogram("h", buckets=(10.0, 1.0))
+
+
+def test_prometheus_exposition_format():
+    reg = MetricsRegistry()
+    reg.counter("repro_served_total", "served requests", workload="w").inc(3)
+    reg.gauge("repro_depth", "queue depth").set(2)
+    h = reg.histogram("repro_lat_ms", "latency", buckets=(1.0, 10.0),
+                      phase="launch")
+    h.observe(0.5)
+    h.observe(5.0)
+    text = reg.to_prometheus()
+    assert "# HELP repro_served_total served requests" in text
+    assert "# TYPE repro_served_total counter" in text
+    assert 'repro_served_total{workload="w"} 3' in text
+    assert "repro_depth 2" in text
+    assert 'repro_lat_ms_bucket{phase="launch",le="1"} 1' in text
+    assert 'repro_lat_ms_bucket{phase="launch",le="+Inf"} 2' in text
+    assert 'repro_lat_ms_sum{phase="launch"} 5.5' in text
+    assert 'repro_lat_ms_count{phase="launch"} 2' in text
+
+
+def test_snapshot_is_json_able_and_structured():
+    reg = MetricsRegistry()
+    reg.counter("c_total", "help text", workload="w").inc()
+    reg.histogram("h_ms", buckets=(1.0,)).observe(0.5)
+    snap = json.loads(json.dumps(reg.snapshot()))
+    assert snap["c_total"]["type"] == "counter"
+    assert snap["c_total"]["series"][0]["labels"] == {"workload": "w"}
+    assert snap["h_ms"]["series"][0]["buckets"] == {"1": 1, "+Inf": 1}
+    reg.clear()
+    assert reg.snapshot() == {}
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+
+def test_flight_recorder_ring_and_dump(tmp_path, monkeypatch):
+    clock = StepClock()
+    rec = FlightRecorder(capacity=3, clock=clock)
+    for i in range(5):
+        rec.record("dispatch", n=i)
+    assert len(rec) == 3
+    assert [r["n"] for r in rec.records()] == [2, 3, 4]
+    assert all(r["kind"] == "dispatch" and "t" in r for r in rec.records())
+
+    monkeypatch.setenv("REPRO_FLIGHT_DIR", str(tmp_path))
+    doc = rec.dump(reason="queue full")
+    assert doc["reason"] == "queue full" and doc["n"] == 3
+    assert [r["n"] for r in doc["records"]] == [2, 3, 4]
+    assert rec.dumps == 1
+    on_disk = json.loads((tmp_path / doc["path"].split("/")[-1]).read_text())
+    assert on_disk["reason"] == "queue full"
+
+
+def test_flight_recorder_rejects_bad_capacity():
+    with pytest.raises(ValueError, match="capacity"):
+        FlightRecorder(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace validator (negative cases; the positive case is exercised
+# by every export test above)
+# ---------------------------------------------------------------------------
+
+
+def test_validate_chrome_flags_structural_problems():
+    assert validate_chrome({}) == ["top-level 'traceEvents' list is missing"]
+    assert validate_chrome({"traceEvents": []}) == ["'traceEvents' is empty"]
+
+    missing_dur = {"traceEvents": [{"ph": "X", "name": "a", "ts": 1}]}
+    assert any("missing 'dur'" in p for p in validate_chrome(missing_dur))
+
+    unmatched_e = {"traceEvents": [
+        {"ph": "e", "name": "a", "ts": 1, "id": "1", "cat": "request"}]}
+    assert any("without matching 'b'" in p for p in validate_chrome(unmatched_e))
+
+    unmatched_b = {"traceEvents": [
+        {"ph": "b", "name": "a", "ts": 1, "id": "1", "cat": "request"}]}
+    assert any("unmatched" in p for p in validate_chrome(unmatched_b))
+
+    negative_ts = {"traceEvents": [
+        {"ph": "X", "name": "a", "ts": -5, "dur": 1}]}
+    assert any("negative ts" in p for p in validate_chrome(negative_ts))
+
+    open_B = {"traceEvents": [{"ph": "B", "name": "a", "ts": 1, "tid": 1}]}
+    assert any("unterminated" in p for p in validate_chrome(open_B))
+
+    bad_key = {"traceEvents": [{"ts": 0}]}
+    assert any("missing required key" in p for p in validate_chrome(bad_key))

@@ -24,10 +24,28 @@ def test_gate_fails_below_floor():
     assert len(regressions) == 1 and "onehot/B8" in regressions[0]
 
 
+def test_gate_regression_message_shows_measured_committed_ratio():
+    """A failure must carry the measured value, the committed baseline, and
+    their ratio side-by-side — diagnosable from the CI log alone."""
+    committed = _payload(batch_vs_b1={"onehot": {"B8": 1.6}})
+    fresh = _payload(batch_vs_b1={"onehot": {"B8": 0.8}})
+    regressions, report = gate(committed, fresh, noise=0.35)
+    (msg,) = regressions
+    assert "measured=0.800" in msg
+    assert "committed=1.600" in msg
+    assert "0.50x" in msg
+    line = next(ln for ln in report if "REGRESSION" in ln)
+    assert "measured=0.800" in line and "committed=1.600" in line
+    assert "ratio=0.50x" in line
+
+
 def test_gate_fails_on_metric_missing_from_fresh():
     committed = _payload(batch_vs_b1={"onehot": {"B8": 1.6}})
     regressions, _ = gate(committed, _payload(batch_vs_b1={}), noise=0.35)
-    assert regressions == ["batch_vs_b1/onehot/B8 (missing)"]
+    assert len(regressions) == 1
+    assert "batch_vs_b1/onehot/B8 (missing)" in regressions[0]
+    # the committed value appears so the failure is actionable on its own
+    assert "committed=1.600" in regressions[0]
 
 
 def test_gate_fails_loudly_on_new_section_without_baseline():
